@@ -1,0 +1,160 @@
+"""Paper Fig. 3: ingest rate (edges/s) vs #ingest processes and graph scale.
+
+Protocol mirrors §IV-A: k SPMD ingestors each generate a Graph500
+unpermuted power-law graph (scale s, degree 16) and ingest adjacency
+triples simultaneously in ~500k-char batches; the optimized connector
+(sorted tablets + routing + merge compaction) is compared against the
+naive reference connector (the Matlab-D4M stand-in). CPU scales are
+reduced vs the paper (12-18 -> 10-14); the shapes of the curves are the
+reproduction target, not absolute rates.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.data.graph500 import graph500_triples
+from repro.db.batching import batch_triples
+from repro.db.kvstore import ShardedTable, shard_of
+from repro.db.naive import NaiveTable
+from repro.core.dictionary import StringDict
+from repro.kernels.common import I32_MAX
+from repro.train.elastic import WorkQueue
+
+import jax
+import jax.numpy as jnp
+
+
+def _prepare(k: int, scale: int, char_budget: int):
+    """Per-ingestor batch lists (string triples already batched)."""
+    per_ingestor = []
+    for i in range(k):
+        r, c, v = graph500_triples(scale, 16, seed=100 + i)
+        per_ingestor.append(list(batch_triples(r, c, v, char_budget)))
+    return per_ingestor
+
+
+def run_optimized(k: int, scale: int, char_budget: int = 500_000,
+                  use_pallas: bool = False, steal: bool = False) -> dict:
+    """k simulated SPMD ingestors submitting one ~500k-char batch each per
+    step. One CPU executes the k ingestors' work SERIALLY, so the measured
+    wall is Σ-of-workers; ``parallel_edges_per_s`` (= serial rate × k) is
+    the perfect-SPMD projection the shard_map path realizes on a real mesh
+    (each ingestor's batch is an independent route+append, flushes are
+    per-shard local — no cross-worker serialization)."""
+    batches = _prepare(k, scale, char_budget)
+    total_edges = sum(sum(len(b[0]) for b in bl) for bl in batches)
+    # size tablet capacity from the ACTUAL shard skew (unpermuted power-law
+    # graphs pile the hubs into the low-id shard) — Accumulo pre-split
+    # planning from a sample
+    probe = StringDict()
+    counts = np.zeros(k, np.int64)
+    bmax = 1
+    for bl in batches:
+        for b in bl:
+            ids = probe.encode(b[0])
+            counts += np.bincount(shard_of(ids, k, 1 << 22), minlength=k)
+            bmax = max(bmax, len(b[0]))
+    cap = max(1 << 12, int(counts.max() * 1.3))
+    bcap = 1 << (bmax - 1).bit_length()
+    # bulk-load mode: memtable sized to the tablet -> O(1) compactions
+    # total (merging into a single sorted run repeatedly is quadratic; real
+    # LSM trees level for the same reason)
+    store = ShardedTable("bench", num_shards=k, capacity_per_shard=cap,
+                         batch_cap=bcap, id_capacity=1 << 22,
+                         use_pallas=use_pallas,
+                         memtable_cap=max(cap, 4 * bcap))
+    keydict = StringDict()
+
+    # warmup: compile append (at the dominant padded batch shape) AND the
+    # minor-compaction path — excluded from timing
+    store.insert(np.zeros(bcap, np.int32), np.zeros(bcap, np.int32),
+                 np.ones(bcap, np.float32))
+    store.flush()
+    store.tablets = jax.tree.map(lambda x: x, store.tablets)  # keep warm state
+    # reset contents after warmup
+    from repro.db.kvstore import tablet_empty
+    import jax as _jax, jax.numpy as _jnp
+    store.tablets = _jax.tree.map(lambda *xs: _jnp.stack(xs),
+                                  *[tablet_empty(store.cap)] * k)
+
+    t0 = time.time()
+    if steal:  # straggler-mitigation mode: batches pulled from a work queue
+        flat = [b for bl in batches for b in bl]
+        q = WorkQueue(flat)
+        while not q.complete():
+            for w in range(k):
+                bid, b = q.claim(w)
+                if bid is None:
+                    continue
+                rid = keydict.encode(b[0])
+                cid = keydict.encode(b[1])
+                store.insert(rid, cid, b[2])
+                q.ack(bid)
+    else:
+        step = 0
+        while any(step < len(bl) for bl in batches):
+            for bl in batches:           # each ingestor submits its batch
+                if step < len(bl):
+                    store.insert(keydict.encode(bl[step][0]),
+                                 keydict.encode(bl[step][1]),
+                                 bl[step][2].astype(np.float32))
+            step += 1
+    store.flush()
+    store.tablets.rows.block_until_ready()
+    wall = time.time() - t0
+    return {"k": k, "scale": scale, "edges": total_edges, "wall_s": wall,
+            "edges_per_s": total_edges / wall,
+            "parallel_edges_per_s": total_edges / wall * k,
+            "nnz": store.nnz()}
+
+
+def run_naive(k: int, scale: int, char_budget: int = 500_000) -> dict:
+    batches = _prepare(k, scale, char_budget)
+    total_edges = sum(sum(len(b[0]) for b in bl) for bl in batches)
+    tab = NaiveTable("bench")
+    t0 = time.time()
+    step = 0
+    while any(step < len(bl) for bl in batches):
+        for bl in batches:
+            if step < len(bl):
+                tab.put_triple(*bl[step])
+        step += 1
+    wall = time.time() - t0
+    return {"k": k, "scale": scale, "edges": total_edges, "wall_s": wall,
+            "edges_per_s": total_edges / wall}
+
+
+def fig3(ks=(1, 2, 4, 8, 16), scales=(10, 12, 14), char_budget=500_000):
+    rows = []
+    for scale in scales:
+        for k in ks:
+            opt = run_optimized(k, scale, char_budget)
+            nai = run_naive(k, scale, char_budget)
+            rows.append({
+                "scale": scale, "k": k, "edges": opt["edges"],
+                "opt_edges_per_s": opt["edges_per_s"],
+                "naive_edges_per_s": nai["edges_per_s"],
+                "speedup": opt["edges_per_s"] / nai["edges_per_s"],
+            })
+            print(f"scale={scale} k={k:2d} edges={opt['edges']:>9,} "
+                  f"opt={opt['edges_per_s']:>12,.0f} e/s "
+                  f"naive={nai['edges_per_s']:>12,.0f} e/s")
+    return rows
+
+
+def batch_sweep(scale=12, k=4, budgets=(50_000, 200_000, 500_000, 2_000_000)):
+    """The paper's 500k-char batch knob (§V crossover discussion)."""
+    rows = []
+    for b in budgets:
+        r = run_optimized(k, scale, char_budget=b)
+        rows.append({"char_budget": b, "edges_per_s": r["edges_per_s"]})
+        print(f"budget={b:>9,} -> {r['edges_per_s']:>12,.0f} e/s")
+    return rows
+
+
+if __name__ == "__main__":
+    fig3()
+    batch_sweep()

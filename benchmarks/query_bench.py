@@ -1,0 +1,79 @@
+"""Paper Fig. 4: query rate (edges returned/s) vs queried-vertex degree.
+
+Protocol mirrors §IV-B: ingest a large power-law graph + degree table
+(D4M 2.0 schema, 8 ingestors), pick vertices with out/in degree near
+{1, 10, 100, 1000} via the degree table, run the four query types —
+single-vertex row (SVR), single-vertex column (SVC), multi-vertex row
+(MVR, 5 vertices), multi-vertex column (MVC) — and measure edges/s.
+Column queries exercise the transpose-table routing.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.data.graph500 import graph500_triples
+from repro.db import EdgeSchema, NaiveTable, dbsetup
+
+
+def build_graph(scale: int = 13, ingestors: int = 8, use_pallas: bool = False):
+    server = dbsetup("querybench", num_shards=4,
+                     capacity_per_shard=1 << 21, batch_cap=1 << 16,
+                     id_capacity=1 << 22, use_pallas=use_pallas)
+    g = EdgeSchema(server, "g")
+    naive = NaiveTable("naive")
+    for i in range(ingestors):
+        r, c, v = graph500_triples(scale, 16, seed=300 + i)
+        g.put_triple(r, c, v)
+        naive.put_triple(r, c, v)
+    return g, naive
+
+
+def _measure(fn, reps: int) -> tuple:
+    t0 = time.time()
+    edges = 0
+    for _ in range(reps):
+        a = fn()
+        edges += a.nnz()
+    return edges, time.time() - t0
+
+
+def fig4(scale: int = 13, degrees=(1, 10, 100, 1000), reps: int = 5):
+    g, naive = build_graph(scale)
+    rng = np.random.default_rng(0)
+    rows = []
+    for target in degrees:
+        for kind, sel in (("out", "row"), ("in", "col")):
+            vs = g.deg.vertices_with_degree(target, kind=kind)
+            if len(vs) == 0:
+                continue
+            single = str(rng.choice(vs)) + ","
+            multi = "".join(str(v) + "," for v in
+                            rng.choice(vs, size=min(5, len(vs)),
+                                       replace=False))
+            for qname, q in (("SV", single), ("MV", multi)):
+                if sel == "row":
+                    fn = lambda q=q: g[q, :]
+                    fn_n = lambda q=q: naive[q, :]
+                else:
+                    fn = lambda q=q: g[:, q]
+                    fn_n = lambda q=q: naive[:, q]
+                fn()  # warmup (compile)
+                edges, wall = _measure(fn, reps)
+                edges_n, wall_n = _measure(fn_n, max(reps // 5, 1))
+                label = f"{qname}{'R' if sel == 'row' else 'C'}"
+                rows.append({
+                    "degree": target, "query": label,
+                    "edges_returned": edges // reps,
+                    "opt_edges_per_s": edges / wall,
+                    "naive_edges_per_s": edges_n / wall_n if edges_n else 0.0,
+                })
+                print(f"deg~{target:>5} {label}: {edges // reps:>7,} edges "
+                      f"opt={edges / wall:>12,.0f} e/s "
+                      f"naive={(edges_n / wall_n if edges_n else 0):>12,.0f} e/s")
+    return rows
+
+
+if __name__ == "__main__":
+    fig4()

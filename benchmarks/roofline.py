@@ -1,0 +1,81 @@
+"""Roofline table generator: reads launch/dryrun JSON records and emits the
+EXPERIMENTS.md §Roofline markdown table + CSV."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+
+def load_records(path: str = "experiments/dryrun") -> List[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(f) as fh:
+            recs.extend(json.load(fh))
+    # dedupe by (arch, shape, mesh), last wins
+    seen = {}
+    for r in recs:
+        seen[(r.get("arch"), r.get("shape"), r.get("mesh"))] = r
+    return list(seen.values())
+
+
+def fmt_ms(x) -> str:
+    return f"{x * 1e3:,.1f}"
+
+
+def table(recs: List[dict], mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | kind | compute ms | memory ms | collective ms | "
+        "bottleneck | useful | HBM GB/dev | note |",
+        "|---|---|---|---:|---:|---:|---|---:|---:|---|",
+    ]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    recs = [r for r in recs if r.get("mesh") == mesh]
+    recs.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    for r in recs:
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                         f"SKIP | — | — | {r['skipped'][:60]} |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                         f"ERROR | — | — | {r['error'][:60]} |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+            f"{fmt_ms(r['compute_s'])} | {fmt_ms(r['memory_s'])} | "
+            f"{fmt_ms(r['collective_s'])} | {r['bottleneck']} | "
+            f"{r['useful_ratio']:.2f} | "
+            f"{r['hbm_bytes_per_device'] / 1e9:.1f} | |")
+    return "\n".join(lines)
+
+
+def csv(recs: List[dict]) -> str:
+    cols = ["arch", "shape", "mesh", "kind", "compute_s", "memory_s",
+            "collective_s", "bottleneck", "useful_ratio",
+            "flops_per_device", "bytes_per_device", "link_bytes_per_device",
+            "hbm_bytes_per_device", "compile_s"]
+    out = [",".join(cols)]
+    for r in recs:
+        if "error" in r or "skipped" in r:
+            continue
+        out.append(",".join(str(r.get(c, "")) for c in cols))
+    return "\n".join(out)
+
+
+def main():
+    recs = load_records()
+    print(f"{len(recs)} records")
+    for mesh in ("16x16", "2x16x16"):
+        n = sum(1 for r in recs if r.get("mesh") == mesh)
+        print(f"\n== mesh {mesh} ({n} cells) ==")
+        print(table(recs, mesh))
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/roofline.csv", "w") as f:
+        f.write(csv(recs))
+    print("\nwrote experiments/roofline.csv")
+
+
+if __name__ == "__main__":
+    main()

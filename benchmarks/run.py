@@ -1,0 +1,137 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = edges/s or the
+figure-specific rate). Reduced sizes keep the whole suite CPU-friendly;
+pass --full for the paper-scale grid.
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+# ------------------------------------------------------- Fig 3 (ingest)
+def bench_fig3_ingest(full: bool) -> None:
+    from .ingest_bench import run_naive, run_optimized
+    ks = (1, 2, 4, 8, 16) if full else (1, 4, 16)
+    scales = (10, 12, 14) if full else (10, 12)
+    for scale in scales:
+        for k in ks:
+            opt = run_optimized(k, scale)
+            nai = run_naive(k, scale)
+            emit(f"fig3_ingest_opt_s{scale}_k{k}",
+                 opt["wall_s"] * 1e6,
+                 f"{opt['edges_per_s']:.0f} edges/s serial; "
+                 f"{opt['parallel_edges_per_s']:.0f} projected-parallel")
+            emit(f"fig3_ingest_naive_s{scale}_k{k}",
+                 nai["wall_s"] * 1e6,
+                 f"{nai['edges_per_s']:.0f} edges/s (single stream, "
+                 f"no partitioning)")
+
+
+def bench_fig3_batch_knob(full: bool) -> None:
+    from .ingest_bench import batch_sweep
+    budgets = (50_000, 200_000, 500_000, 2_000_000) if full \
+        else (100_000, 500_000)
+    for row in batch_sweep(scale=11, k=4, budgets=budgets):
+        emit(f"fig3_batch_{row['char_budget']}", 0.0,
+             f"{row['edges_per_s']:.0f} edges/s")
+
+
+def bench_fig3_straggler(full: bool) -> None:
+    from .ingest_bench import run_optimized
+    base = run_optimized(4, 11)
+    steal = run_optimized(4, 11, steal=True)
+    emit("fig3_straggler_worksteal", steal["wall_s"] * 1e6,
+         f"{steal['edges_per_s']:.0f} edges/s vs {base['edges_per_s']:.0f} push")
+
+
+# -------------------------------------------------------- Fig 4 (query)
+def bench_fig4_query(full: bool) -> None:
+    from .query_bench import fig4
+    rows = fig4(scale=13 if full else 11,
+                degrees=(1, 10, 100, 1000) if full else (1, 10, 100),
+                reps=5 if full else 3)
+    for r in rows:
+        emit(f"fig4_{r['query']}_deg{r['degree']}", 0.0,
+             f"{r['opt_edges_per_s']:.0f} edges/s "
+             f"(naive {r['naive_edges_per_s']:.0f})")
+
+
+# ------------------------------------------- DB micro (compiled paths)
+def bench_db_micro(full: bool) -> None:
+    from repro.db.kvstore import ShardedTable
+
+    n = 1 << 18
+    store = ShardedTable("micro", num_shards=1, capacity_per_shard=n * 2,
+                         batch_cap=n, id_capacity=1 << 22, use_pallas=False)
+    rng = np.random.default_rng(0)
+    rows = rng.integers(0, 1 << 22, n).astype(np.int32)
+    cols = rng.integers(0, 1 << 16, n).astype(np.int32)
+    vals = rng.normal(size=n).astype(np.float32)
+    t0 = time.time()
+    store.insert(rows, cols, vals)
+    store.tablets.rows.block_until_ready()
+    dt = time.time() - t0
+    emit("db_minor_compaction_262k", dt * 1e6, f"{n / dt:.0f} triples/s")
+
+    q = rng.choice(rows, 4096).astype(np.int32)
+    store.query_rows(q[:16])  # warmup
+    t0 = time.time()
+    store.query_rows(q)
+    dt = time.time() - t0
+    emit("db_rank_query_4096", dt * 1e6, f"{4096 / dt:.0f} queries/s")
+
+
+# ------------------------------------------------- roofline (from dry-run)
+def bench_roofline_summary(full: bool) -> None:
+    import os
+    from .roofline import load_records
+    if not os.path.isdir("experiments/dryrun"):
+        print("# roofline: experiments/dryrun missing — run "
+              "`python -m repro.launch.dryrun --all --mesh both "
+              "--out experiments/dryrun` first")
+        return
+    recs = [r for r in load_records() if "error" not in r
+            and "skipped" not in r]
+    for r in recs:
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}", 0.0,
+             f"bottleneck={r['bottleneck']} dominant={dom * 1e3:.1f}ms "
+             f"useful={r['useful_ratio']:.2f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    benches = {
+        "fig3": bench_fig3_ingest,
+        "fig3_batch": bench_fig3_batch_knob,
+        "fig3_straggler": bench_fig3_straggler,
+        "fig4": bench_fig4_query,
+        "db_micro": bench_db_micro,
+        "roofline": bench_roofline_summary,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        fn(args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Quickstart: associative arrays + the paper's Listing-1 database workflow.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import Assoc
+from repro.db import dbinit, dbsetup, delete, put
+
+# --- associative arrays (paper §II) ---------------------------------------
+A = Assoc("alice,alice,bob,carl,", "bob,carl,alice,alice,", [1.0, 2.0, 3.0, 4.0])
+print("A =\n", A)
+
+print("\nrow query     A['alice,',:]        ->\n", A["alice,", :])
+print("\nprefix query  A['al*,',:]          ->\n", A["al*,", :])
+print("\nrange query   A['alice,:,bob,',:]  ->\n", A["alice,:,bob,", :])
+print("\nvalue filter  A == 4.0             ->\n", A == 4.0)
+
+B = Assoc("alice,dan,", "carl,alice,", [10.0, 20.0])
+print("\nA + B ->\n", A + B)
+print("\nA & B ->\n", A & B)
+
+# BFS == matrix-vector multiply (paper Fig. 1)
+seed = Assoc("q,", "alice,", 1.0)
+print("\nneighbors of alice via seed*A ->\n", seed * A)
+
+# --- database workflow (paper Listing 1) ----------------------------------
+dbinit()
+DB = dbsetup("mydb02", num_shards=4, capacity_per_shard=4096,
+             batch_cap=2048, id_capacity=1 << 16)
+Tedge = DB["my_Tedge", "my_TedgeT"]
+TedgeDeg = DB["my_TedgeDeg"]
+
+put(Tedge, A)
+print("\nTedge['alice,',:] ->\n", Tedge["alice,", :])
+print("\nTedge[:,'alice,'] (transpose-routed) ->\n", Tedge[:, "alice,"])
+
+delete(Tedge)
+delete(TedgeDeg)
+print("\ntables after delete:", DB.ls())

@@ -1,0 +1,10 @@
+"""Serve a small LM with batched requests (continuous prefill+decode engine).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    stats = serve_main(["--arch", "smollm-135m", "--reduced",
+                        "--requests", "8", "--max-new", "16", "--slots", "4"])
+    assert stats["tokens_out"] >= 8 * 8

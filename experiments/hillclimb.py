@@ -1,0 +1,103 @@
+"""Perf hillclimb driver (EXPERIMENTS §Perf).
+
+Runs named variants of the three chosen cells through the dry-run pipeline
+and logs the roofline terms per variant. Each variant encodes a hypothesis
+(recorded in EXPERIMENTS.md) — this file is the measurement harness.
+
+  PYTHONPATH=src python experiments/hillclimb.py --cell smollm
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+from repro.launch.dryrun import run_cell
+from repro.train.optimizer import AdamWConfig
+
+QOPT = AdamWConfig(quantized_state=True)
+
+CELLS = {
+    # worst useful ratio (0.09): tiny model over-sharded by 16-way TP
+    "smollm": [
+        ("baseline", dict(arch="smollm-135m", shape="prefill_32k",
+                          multi_pod=False)),
+        ("no_tp_seq_parallel", dict(arch="smollm-135m", shape="prefill_32k",
+                                    multi_pod=False,
+                                    rules_overrides={"tp_enabled": False,
+                                                     "fsdp": None,
+                                                     "seq": "model"})),
+        ("no_tp_no_seq", dict(arch="smollm-135m", shape="prefill_32k",
+                              multi_pod=False,
+                              rules_overrides={"tp_enabled": False,
+                                               "fsdp": None})),
+        ("no_tp_seq_vocab_tp", dict(arch="smollm-135m", shape="prefill_32k",
+                                    multi_pod=False,
+                                    rules_overrides={"tp_enabled": False,
+                                                     "fsdp": None,
+                                                     "seq": "model",
+                                                     "vocab_mode": "tp"})),
+    ],
+    # most collective-bound: 1T MoE, FSDP weight gathers dominate
+    "kimi": [
+        ("baseline", dict(arch="kimi-k2-1t-a32b", shape="train_4k",
+                          multi_pod=True)),
+        ("quant_opt", dict(arch="kimi-k2-1t-a32b", shape="train_4k",
+                           multi_pod=True, opt_cfg=QOPT)),
+        ("quant_opt_remat_nothing", dict(arch="kimi-k2-1t-a32b",
+                                         shape="train_4k", multi_pod=True,
+                                         opt_cfg=QOPT, remat="nothing")),
+        ("quant_opt_mb4", dict(arch="kimi-k2-1t-a32b", shape="train_4k",
+                               multi_pod=True, opt_cfg=QOPT, microbatches=4)),
+        ("ep_only_no_fsdp", dict(arch="kimi-k2-1t-a32b", shape="train_4k",
+                                 multi_pod=True, opt_cfg=QOPT,
+                                 rules_overrides={"fsdp": None})),
+    ],
+    # paper-representative (256k-vocab gather/scatter) + worst abs collective
+    "commandr": [
+        ("baseline", dict(arch="command-r-plus-104b", shape="train_4k",
+                          multi_pod=False)),
+        ("quant_opt", dict(arch="command-r-plus-104b", shape="train_4k",
+                           multi_pod=False, opt_cfg=QOPT)),
+        ("quant_opt_remat_nothing", dict(arch="command-r-plus-104b",
+                                         shape="train_4k", multi_pod=False,
+                                         opt_cfg=QOPT, remat="nothing")),
+        ("quant_opt_mb4_nothing", dict(arch="command-r-plus-104b",
+                                       shape="train_4k", multi_pod=False,
+                                       opt_cfg=QOPT, remat="nothing",
+                                       microbatches=4)),
+        ("vocab_replicated", dict(arch="command-r-plus-104b", shape="train_4k",
+                                  multi_pod=False, opt_cfg=QOPT,
+                                  rules_overrides={"vocab_mode":
+                                                   "replicated"})),
+    ],
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=list(CELLS) + ["all"], default="all")
+    ap.add_argument("--out", default="experiments/hillclimb")
+    args = ap.parse_args()
+    cells = list(CELLS) if args.cell == "all" else [args.cell]
+    os.makedirs(args.out, exist_ok=True)
+    for cell in cells:
+        recs = []
+        for name, kw in CELLS[cell]:
+            print(f"\n=== {cell} :: {name} ===")
+            try:
+                rec = run_cell(**kw)
+                rec["variant"] = name
+            except Exception as e:  # noqa: BLE001
+                import traceback
+                traceback.print_exc()
+                rec = {"variant": name, "error": f"{type(e).__name__}: {e}"}
+            recs.append(rec)
+        path = os.path.join(args.out, f"{cell}.json")
+        with open(path, "w") as f:
+            json.dump(recs, f, indent=1)
+        print("wrote", path)
+
+
+if __name__ == "__main__":
+    main()

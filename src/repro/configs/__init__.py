@@ -1,0 +1,4 @@
+from .registry import ARCH_IDS, SHAPES, all_cells, get_config, get_reduced, shapes_for
+
+__all__ = ["ARCH_IDS", "SHAPES", "all_cells", "get_config", "get_reduced",
+           "shapes_for"]

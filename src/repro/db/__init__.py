@@ -1,0 +1,11 @@
+# The Accumulo-analogue database layer (DESIGN §2): mesh-sharded sorted KV
+# store + the paper's Listing-1 connector API + D4M 2.0 schema.
+from .connector import DBserver, Table, TablePair, dbinit, dbsetup, delete, put, putTriple
+from .schema import DegreeTable, EdgeSchema
+from .naive import NaiveTable
+from . import graphulo
+
+__all__ = [
+    "DBserver", "Table", "TablePair", "dbinit", "dbsetup", "delete", "put",
+    "putTriple", "DegreeTable", "EdgeSchema", "NaiveTable", "graphulo",
+]

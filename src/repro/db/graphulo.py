@@ -1,0 +1,89 @@
+"""Graphulo-style server-side GraphBLAS ops — the paper's §VI future work.
+
+Graphulo implements GraphBLAS kernels as Accumulo server-side iterators so
+graph algorithms run *inside* the database. The mesh analogue: operate on
+the shard-resident tablet arrays directly (no client round-trip through
+string space), using the SpMV Pallas kernel / vectorized SpGEMM on the
+dictionary-encoded ids, and write results back through the combiner path.
+
+Provided kernels (GraphBLAS-style over the tropical/arithmetic semiring):
+  * ``table_spmv``  — y = A @ x           (BFS / PageRank steps)
+  * ``table_spgemm``— C = A @ B           (multi-hop reachability), result
+                      ingested into a new table with a sum combiner
+  * ``table_tricount`` — triangle counting via C = A @ A masked by A
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import sparsegemm as sg
+from ..kernels.spmv import ell_from_coo, spmv_ell
+from .connector import DBserver, Table, TablePair
+
+
+def _table_coo(table: Table):
+    """Server-side view: dictionary-encoded triples straight off the shards."""
+    r, c, v = table.store.scan()
+    order = np.lexsort((c, r))
+    return r[order].astype(np.int64), c[order].astype(np.int64), \
+        v[order].astype(np.float64)
+
+
+def _dim(server: DBserver) -> int:
+    return len(server.keydict)
+
+
+def table_spmv(table, x: np.ndarray, use_pallas: bool = False) -> np.ndarray:
+    """y = A @ x over vertex-id space (x indexed by key id)."""
+    t = table.table if isinstance(table, TablePair) else table
+    r, c, v = _table_coo(t)
+    n = _dim(t.server)
+    if use_pallas:
+        cols, vals = ell_from_coo(r.astype(np.int64), c, v, n)
+        return np.asarray(spmv_ell(jnp.asarray(cols), jnp.asarray(vals),
+                                   jnp.asarray(x, np.float32)))
+    return sg.spmv((r, c, v), np.asarray(x, np.float64))[: n]
+
+
+def table_spgemm(table_a, table_b, server: DBserver,
+                 out_name: Optional[str] = None):
+    """C = A @ B server-side; optionally ingest C into ``out_name``.
+
+    Returns (rows, cols, vals) id-space triples; when ``out_name`` is given
+    the result lands in a new table through the normal combiner path and is
+    queryable with Listing-1 syntax immediately.
+    """
+    ta = table_a.table if isinstance(table_a, TablePair) else table_a
+    tb = table_b.table if isinstance(table_b, TablePair) else table_b
+    a = _table_coo(ta)
+    b = _table_coo(tb)
+    n = _dim(server)
+    rr, cc, vv = sg.spgemm(a, b, n)
+    if out_name is not None:
+        out = server[out_name]
+        keys = server.keydict.decode(np.arange(n))
+        out.put_triple(keys[rr], keys[cc], vv)
+        return out
+    return rr, cc, vv
+
+
+def table_tricount(pair: TablePair, server: DBserver) -> int:
+    """Triangles = sum(A ∘ (A @ A)) / 6 on the symmetrized pattern."""
+    t = pair.table if isinstance(pair, TablePair) else pair
+    r, c, v = _table_coo(t)
+    keep = r != c                                     # drop self loops
+    r, c = r[keep], c[keep]
+    # symmetrize the pattern
+    rs = np.concatenate([r, c])
+    cs = np.concatenate([c, r])
+    rs, cs, vs = sg.coalesce(rs, cs, np.ones(len(rs)), "max")
+    n = _dim(server)
+    rr, cc, vv = sg.spgemm((rs, cs, vs), (rs, cs, vs), n)
+    # hadamard mask with A: count paths of length 2 that close
+    akeys = set(zip(rs.tolist(), cs.tolist()))
+    total = sum(val for a, b, val in zip(rr.tolist(), cc.tolist(), vv.tolist())
+                if (a, b) in akeys)
+    return int(round(total / 6.0))

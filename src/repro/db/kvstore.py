@@ -1,0 +1,371 @@
+"""Mesh-sharded sorted key-value store — the Accumulo analogue (DESIGN §2).
+
+Each *tablet* is a fixed-capacity sorted run of (row_id, col_id) -> value
+entries on one mesh shard, range-partitioned by row id (pre-split tablets,
+as in the 100M-inserts/s Accumulo+D4M setup the paper cites). Ingest is a
+minor compaction: sort the incoming batch, merge-rank it into the run
+(Pallas ``merge_rank`` kernel), combine duplicates (Accumulo iterator
+semantics: last-wins versioning or a sum combiner), and compact. Queries
+are rank searches (Pallas ``sorted_search``) + bounded gathers.
+
+All device functions are jit-compatible (static capacities, explicit valid
+counts, I32_MAX key padding). Two drivers exist:
+  * ``ShardedTable``      — stacked [S, cap] tablets on one device; used for
+                             CPU benchmarking of k-way ingest (paper Fig. 3).
+  * ``repro.db.spmd``     — shard_map driver with all_to_all mutation routing
+                             for real meshes (and the multi-pod dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.common import I32_MAX, INTERPRET
+from ..kernels.merge_rank import merge_sorted
+from ..kernels.merge_rank.ref import merge_sorted_ref
+from ..kernels.sorted_search import sorted_search
+from ..kernels.segment_reduce import segment_sum
+
+COMBINERS = ("last", "sum", "min", "max")
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass, data_fields=["rows", "cols", "vals", "n"],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class Tablet:
+    rows: jax.Array  # int32[cap]; valid prefix sorted lex by (row, col); pad I32_MAX
+    cols: jax.Array  # int32[cap]
+    vals: jax.Array  # float32[cap]
+    n: jax.Array     # int32 valid count
+
+
+def tablet_empty(capacity: int) -> Tablet:
+    return Tablet(
+        rows=jnp.full((capacity,), I32_MAX, jnp.int32),
+        cols=jnp.full((capacity,), I32_MAX, jnp.int32),
+        vals=jnp.zeros((capacity,), jnp.float32),
+        n=jnp.zeros((), jnp.int32),
+    )
+
+
+def _dedup_combine(mr, mc, mv, combiner: str):
+    """Collapse adjacent duplicate keys of a merged sorted run."""
+    L = mr.shape[0]
+    valid = mr != I32_MAX
+    new = jnp.ones((L,), bool).at[1:].set((mr[1:] != mr[:-1]) | (mc[1:] != mc[:-1]))
+    if combiner == "last":
+        keep = valid & jnp.concatenate([new[1:], jnp.ones((1,), bool)])
+        out_v = mv
+    else:
+        seg = jnp.cumsum(new) - 1
+        contrib = jnp.where(valid, mv, 0.0 if combiner == "sum" else jnp.nan)
+        if combiner == "sum":
+            agg = jnp.zeros((L,), mv.dtype).at[seg].add(contrib)
+        elif combiner == "min":
+            agg = jnp.full((L,), jnp.inf, mv.dtype).at[seg].min(
+                jnp.where(valid, mv, jnp.inf))
+        elif combiner == "max":
+            agg = jnp.full((L,), -jnp.inf, mv.dtype).at[seg].max(
+                jnp.where(valid, mv, -jnp.inf))
+        else:
+            raise ValueError(f"unknown combiner {combiner!r}")
+        keep = valid & new
+        out_v = agg[seg]
+    return keep, out_v
+
+
+@functools.partial(jax.jit, static_argnames=("combiner", "use_pallas"))
+def tablet_insert(t: Tablet, br, bc, bv, combiner: str = "last",
+                  use_pallas: bool = True) -> Tablet:
+    """Minor compaction: merge a batch (pads = I32_MAX keys) into the run.
+
+    Returns the new tablet; ``new.n`` may exceed capacity — the host MUST
+    check for overflow (Accumulo back-pressure analogue).
+    """
+    order = jnp.lexsort((bc, br))
+    br, bc, bv = br[order], bc[order], bv[order]
+    if use_pallas:
+        mr, mc, mv = merge_sorted(t.rows, t.cols, t.vals, br, bc, bv,
+                                  interpret=INTERPRET)
+    else:
+        mr, mc, mv = merge_sorted_ref(t.rows, t.cols, t.vals, br, bc, bv)
+    keep, out_v = _dedup_combine(mr, mc, mv, combiner)
+    cap = t.rows.shape[0]
+    pos = jnp.cumsum(keep) - 1
+    idx = jnp.where(keep, pos, cap)  # dropped when not kept / overflowing
+    return Tablet(
+        rows=jnp.full((cap,), I32_MAX, jnp.int32).at[idx].set(mr, mode="drop"),
+        cols=jnp.full((cap,), I32_MAX, jnp.int32).at[idx].set(mc, mode="drop"),
+        vals=jnp.zeros((cap,), jnp.float32).at[idx].set(out_v, mode="drop"),
+        n=keep.sum().astype(jnp.int32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("max_return", "use_pallas"))
+def tablet_query_rows(t: Tablet, q: jax.Array, max_return: int,
+                      use_pallas: bool = True):
+    """Point row queries: all (col, val) for each row id in ``q``.
+
+    Returns (cols[Q, max_return], vals[Q, max_return], valid[Q, max_return],
+    counts[Q]); counts may exceed max_return (host re-queries with a larger
+    bound — Accumulo batch-scanner buffer semantics).
+    """
+    if use_pallas:
+        start = sorted_search(t.rows, q, "left", interpret=INTERPRET)
+        end = sorted_search(t.rows, q, "right", interpret=INTERPRET)
+    else:
+        start = jnp.searchsorted(t.rows, q, side="left").astype(jnp.int32)
+        end = jnp.searchsorted(t.rows, q, side="right").astype(jnp.int32)
+    cap = t.rows.shape[0]
+    idx = start[:, None] + jnp.arange(max_return, dtype=jnp.int32)[None, :]
+    ok = idx < end[:, None]
+    idxc = jnp.clip(idx, 0, cap - 1)
+    return t.cols[idxc], t.vals[idxc], ok, end - start
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def degree_update(deg: jax.Array, ids: jax.Array, weights: jax.Array,
+                  use_pallas: bool = True) -> jax.Array:
+    """Combiner-iterator analogue: accumulate counts into a dense degree row."""
+    if use_pallas:
+        return deg + segment_sum(ids, weights, n_segments=deg.shape[0],
+                                 interpret=INTERPRET)
+    valid = ids >= 0
+    return deg.at[jnp.where(valid, ids, 0)].add(jnp.where(valid, weights, 0.0))
+
+
+# --------------------------------------------------------------------------
+# Range partitioning (pre-split tablets)
+# --------------------------------------------------------------------------
+def shard_of(ids: np.ndarray, num_shards: int, id_capacity: int) -> np.ndarray:
+    """Owner shard by range partition of the id space (uniform pre-split)."""
+    return np.minimum(
+        (ids.astype(np.int64) * num_shards) // id_capacity, num_shards - 1
+    ).astype(np.int32)
+
+
+def shard_of_dev(ids: jax.Array, num_shards: int, id_capacity: int) -> jax.Array:
+    """Device-side owner computation (ids * S must fit int32: S * id_capacity
+    < 2**31, enforced by the connector's capacity config)."""
+    return jnp.minimum((ids * num_shards) // id_capacity,
+                       num_shards - 1).astype(jnp.int32)
+
+
+def _memtable_append(mem_r, mem_c, mem_v, counts, br, bc, bv):
+    """Append routed batches [S, bcap] into per-shard memtables [S, mcap]
+    at the current write offsets; returns new buffers + counts."""
+    s, mcap = mem_r.shape
+    valid = br != I32_MAX
+    pos_in_row = jnp.cumsum(valid, axis=1) - 1
+    target = jnp.where(valid, counts[:, None] + pos_in_row, mcap)
+    rows_idx = jnp.broadcast_to(jnp.arange(s)[:, None], br.shape)
+    mem_r = mem_r.at[rows_idx, target].set(br, mode="drop")
+    mem_c = mem_c.at[rows_idx, target].set(bc, mode="drop")
+    mem_v = mem_v.at[rows_idx, target].set(bv, mode="drop")
+    return mem_r, mem_c, mem_v, counts + valid.sum(axis=1).astype(counts.dtype)
+
+
+def _memtable_append_flat(mem_r, mem_c, mem_v, counts, dest, slot, r, c, v):
+    """Flat append: entry i of the (dest-sorted) batch lands at
+    memtable[dest_i, counts[dest_i] + slot_i]. Pads carry dest == S and are
+    dropped — work is O(batch), not O(shards × batch_cap)."""
+    s = mem_r.shape[0]
+    valid = dest < s
+    dsafe = jnp.where(valid, dest, 0)
+    col = jnp.where(valid, counts[dsafe] + slot, mem_r.shape[1])
+    mem_r = mem_r.at[dest, col].set(r, mode="drop")
+    mem_c = mem_c.at[dest, col].set(c, mode="drop")
+    mem_v = mem_v.at[dest, col].set(v, mode="drop")
+    add = jnp.zeros_like(counts).at[dsafe].add(valid.astype(counts.dtype))
+    return mem_r, mem_c, mem_v, counts + add
+
+
+_APPEND = jax.jit(_memtable_append)
+_APPEND_FLAT = jax.jit(_memtable_append_flat)
+_INSERT_CACHE: dict = {}
+
+
+def _vmapped_insert(combiner: str, use_pallas: bool):
+    """Module-level jit cache: compiled minor compactions persist across
+    ShardedTable instances (benchmarks create many)."""
+    key = (combiner, use_pallas)
+    if key not in _INSERT_CACHE:
+        _INSERT_CACHE[key] = jax.jit(
+            jax.vmap(functools.partial(tablet_insert, combiner=combiner,
+                                       use_pallas=use_pallas)))
+    return _INSERT_CACHE[key]
+
+
+class ShardedTable:
+    """Stacked-tablet driver: S tablets on the local device.
+
+    Simulates S SPMD ingestors for the paper's Fig. 3 study; the distributed
+    execution path with identical per-shard code is ``repro.db.spmd``.
+
+    Writes land in a per-shard *memtable* (unsorted fixed buffer); a minor
+    compaction (sort + merge-rank into the sorted run) happens only when the
+    memtable fills — Accumulo's write path, and what keeps per-batch ingest
+    cost amortized instead of O(capacity) per mutation batch. Queries flush
+    first (simplest read-your-writes semantics).
+    """
+
+    def __init__(self, name: str, num_shards: int = 4,
+                 capacity_per_shard: int = 1 << 18, batch_cap: int = 1 << 15,
+                 id_capacity: int = 1 << 22, combiner: str = "last",
+                 use_pallas: bool = False, memtable_cap: int = None):
+        # use_pallas=True runs the TPU kernels (interpret-mode on CPU — for
+        # validation only; the XLA path is the CPU-performance path)
+        assert combiner in COMBINERS
+        self.name = name
+        self.S = num_shards
+        self.cap = capacity_per_shard
+        self.batch_cap = batch_cap
+        self.id_capacity = id_capacity
+        self.combiner = combiner
+        self.use_pallas = use_pallas
+        self.mem_cap = memtable_cap or max(batch_cap * 4,
+                                           min(capacity_per_shard, 1 << 18))
+        self.tablets = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[tablet_empty(self.cap)] * num_shards
+        )
+        self._mem_r = jnp.full((num_shards, self.mem_cap), I32_MAX, jnp.int32)
+        self._mem_c = jnp.full((num_shards, self.mem_cap), I32_MAX, jnp.int32)
+        self._mem_v = jnp.zeros((num_shards, self.mem_cap), jnp.float32)
+        self._mem_n = np.zeros((num_shards,), np.int64)
+        self._insert = _vmapped_insert(combiner, use_pallas)
+        self._append = _APPEND
+        self._append_flat = _APPEND_FLAT
+        self._shard_views: dict = {}  # per-shard tablet slices (read cache)
+
+    def nnz(self) -> int:
+        self.flush()
+        return int(self.tablets.n.sum())
+
+    # ------------------------------------------------------------- ingest
+    def route(self, rows: np.ndarray, cols: np.ndarray, vals: np.ndarray):
+        """Host-side BatchWriter routing: bucket triples by owner shard into
+        fixed [S, batch_cap] buffers (pads = I32_MAX)."""
+        dest = shard_of(rows, self.S, self.id_capacity)
+        order = np.argsort(dest, kind="stable")
+        rows, cols, vals, dest = rows[order], cols[order], vals[order], dest[order]
+        counts = np.bincount(dest, minlength=self.S)
+        if counts.max() > self.batch_cap:
+            raise OverflowError(
+                f"shard batch overflow: {counts.max()} > {self.batch_cap}")
+        br = np.full((self.S, self.batch_cap), I32_MAX, np.int32)
+        bc = np.full((self.S, self.batch_cap), I32_MAX, np.int32)
+        bv = np.zeros((self.S, self.batch_cap), np.float32)
+        ends = np.cumsum(counts)
+        starts = ends - counts
+        slot = np.arange(len(rows)) - starts[dest]
+        br[dest, slot] = rows
+        bc[dest, slot] = cols
+        bv[dest, slot] = vals
+        return br, bc, bv
+
+    def insert(self, rows: np.ndarray, cols: np.ndarray, vals: np.ndarray):
+        """Host-side BatchWriter: bucket by owner + flat memtable append."""
+        rows = np.asarray(rows, np.int32)
+        cols = np.asarray(cols, np.int32)
+        vals = np.asarray(vals, np.float32)
+        n = len(rows)
+        if n == 0:
+            return
+        if n > self.mem_cap:
+            raise OverflowError(f"batch {n} exceeds memtable {self.mem_cap}")
+        dest = shard_of(rows, self.S, self.id_capacity)
+        order = np.argsort(dest, kind="stable")
+        dest, rows, cols, vals = dest[order], rows[order], cols[order], vals[order]
+        counts_b = np.bincount(dest, minlength=self.S)
+        if (self._mem_n + counts_b > self.mem_cap).any():
+            self.flush()
+        ends = np.cumsum(counts_b)
+        slot = np.arange(n, dtype=np.int32) - (ends - counts_b)[dest]
+        pad = (1 << max(n - 1, 1).bit_length()) - n  # bucket jit shapes
+        if pad:
+            dest = np.pad(dest, (0, pad), constant_values=self.S)
+            slot = np.pad(slot, (0, pad))
+            rows = np.pad(rows, (0, pad), constant_values=I32_MAX)
+            cols = np.pad(cols, (0, pad), constant_values=I32_MAX)
+            vals = np.pad(vals, (0, pad))
+        self._mem_r, self._mem_c, self._mem_v, cnt = self._append_flat(
+            self._mem_r, self._mem_c, self._mem_v,
+            jnp.asarray(self._mem_n, jnp.int32), jnp.asarray(dest),
+            jnp.asarray(slot), jnp.asarray(rows), jnp.asarray(cols),
+            jnp.asarray(vals))
+        self._mem_n = np.asarray(cnt, np.int64)
+
+    def insert_routed(self, br, bc, bv):
+        """Memtable append of already-routed [S, batch_cap] buffers; minor
+        compaction when a shard's memtable would overflow."""
+        incoming = np.asarray((np.asarray(br) != I32_MAX).sum(axis=1))
+        if (self._mem_n + incoming > self.mem_cap).any():
+            self.flush()
+        self._mem_r, self._mem_c, self._mem_v, counts = self._append(
+            self._mem_r, self._mem_c, self._mem_v,
+            jnp.asarray(self._mem_n, jnp.int32), br, bc, bv)
+        self._mem_n = np.asarray(counts, np.int64)
+
+    def flush(self) -> None:
+        """Minor compaction: merge the memtable into the sorted runs."""
+        if self._mem_n.max(initial=0) == 0:
+            return
+        new = self._insert(self.tablets, self._mem_r, self._mem_c,
+                           self._mem_v)
+        if int(new.n.max()) > self.cap:
+            raise OverflowError(
+                f"tablet overflow in {self.name}: {int(new.n.max())} > {self.cap}")
+        self.tablets = new
+        self._shard_views.clear()
+        self._mem_r = jnp.full((self.S, self.mem_cap), I32_MAX, jnp.int32)
+        self._mem_c = jnp.full((self.S, self.mem_cap), I32_MAX, jnp.int32)
+        self._mem_v = jnp.zeros((self.S, self.mem_cap), jnp.float32)
+        self._mem_n = np.zeros((self.S,), np.int64)
+
+    # -------------------------------------------------------------- query
+    def query_rows(self, row_ids: np.ndarray, max_return: int = 256):
+        """Point queries; returns (row_id, col_id, val) numpy triples."""
+        self.flush()  # read-your-writes: queries see the memtable
+        row_ids = np.asarray(row_ids, np.int32)
+        owner = shard_of(row_ids, self.S, self.id_capacity)
+        out_r, out_c, out_v = [], [], []
+        for s in np.unique(owner):
+            q = row_ids[owner == s]
+            t = self._shard_views.get(int(s))
+            if t is None:  # slicing the stacked arrays copies ~MBs; cache it
+                t = jax.tree.map(lambda x: x[s], self.tablets)
+                self._shard_views[int(s)] = t
+            cols, vals, ok, cnt = tablet_query_rows(
+                t, jnp.asarray(q), max_return, use_pallas=self.use_pallas)
+            cnt = np.asarray(cnt)
+            if cnt.max(initial=0) > max_return:  # widen and retry (batch scanner)
+                cols, vals, ok, cnt = tablet_query_rows(
+                    t, jnp.asarray(q), int(cnt.max()), use_pallas=self.use_pallas)
+            ok = np.asarray(ok)
+            cols, vals = np.asarray(cols), np.asarray(vals)
+            qi, ki = np.nonzero(ok)
+            out_r.append(q[qi])
+            out_c.append(cols[qi, ki])
+            out_v.append(vals[qi, ki])
+        if not out_r:
+            z = np.zeros(0, np.int32)
+            return z, z.copy(), np.zeros(0, np.float32)
+        return (np.concatenate(out_r), np.concatenate(out_c),
+                np.concatenate(out_v))
+
+    def scan(self):
+        """Full-table scan -> (row_ids, col_ids, vals)."""
+        self.flush()
+        rows = np.asarray(self.tablets.rows)
+        cols = np.asarray(self.tablets.cols)
+        vals = np.asarray(self.tablets.vals)
+        n = np.asarray(self.tablets.n)
+        keep = np.arange(rows.shape[1])[None, :] < n[:, None]
+        return rows[keep], cols[keep], vals[keep]

@@ -1,0 +1,13 @@
+# Pallas TPU kernels for the paper's compute hot spots (query rank search,
+# ingest merge-compaction, degree-combiner, assoc-matvec) plus the serving
+# flash-attention kernel. Each subpackage: kernel.py (pl.pallas_call +
+# BlockSpec), ops.py (jit'd wrapper), ref.py (pure-jnp oracle). Validated
+# with interpret=True on CPU; TPU is the target.
+from .flash_attention import flash_attention
+from .merge_rank import merge_sorted
+from .segment_reduce import segment_sum
+from .sorted_search import sorted_search
+from .spmv import ell_from_coo, spmv_ell
+
+__all__ = ["flash_attention", "merge_sorted", "segment_sum", "sorted_search",
+           "ell_from_coo", "spmv_ell"]

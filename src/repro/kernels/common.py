@@ -1,0 +1,26 @@
+"""Shared kernel utilities.
+
+Kernels TARGET TPU (pl.pallas_call + BlockSpec VMEM tiling) and VALIDATE on
+CPU via interpret mode. ``INTERPRET`` flips automatically.
+"""
+import jax
+import jax.numpy as jnp
+
+INTERPRET = jax.default_backend() != "tpu"
+
+I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def pad_to(x, multiple: int, axis: int, value):
+    """Pad ``x`` along ``axis`` up to the next multiple; returns (padded, n)."""
+    n = x.shape[axis]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value), n
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)

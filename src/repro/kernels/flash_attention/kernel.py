@@ -1,0 +1,103 @@
+"""Flash attention (forward) as a Pallas TPU kernel.
+
+The jnp blocked attention in models/layers.py keeps the roofline analysis
+transparent (Pallas custom calls are opaque to HLO cost analysis); THIS
+kernel is the real-hardware hot path that eliminates the P-block HBM
+traffic identified in EXPERIMENTS §Perf (scores/probabilities never leave
+VMEM). Online-softmax accumulators live in the output refs, which persist
+across the innermost (kv-block) grid dimension.
+
+Grid = (batch·heads, q_blocks, kv_blocks); GQA is handled in the k/v index
+maps (query head h reads kv head h // rep — no repeated KV tensor).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, qb: int, kb: int, nk: int,
+                  q_offset: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[0].astype(jnp.float32)              # (qb, hd)
+    k = k_ref[0].astype(jnp.float32)              # (kb, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        qi = pl.program_id(1)
+        qpos = q_offset + qi * qb + jax.lax.broadcasted_iota(
+            jnp.int32, (qb, kb), 0)
+        kpos = j * kb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 1)
+        s = jnp.where(qpos >= kpos, s, -1e30)
+
+    m_prev = m_ref[0]                             # (qb,)
+    l_prev = l_ref[0]
+    o_prev = o_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    o_new = o_prev * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+
+    @pl.when(j == nk - 1)
+    def _final():
+        o_ref[0] = o_new / jnp.maximum(l_new, 1e-30)[:, None]
+
+    @pl.when(j != nk - 1)
+    def _accum():
+        o_ref[0] = o_new
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool, q_offset: int = 0,
+                           qb: int = 256, kb: int = 256,
+                           interpret: bool = True):
+    """q: [B, Sq, H, hd]; k/v: [B, Sk, KV, hd] -> [B, Sq, H, hd]."""
+    b, sq, h, hd = q.shape
+    kvh, sk = k.shape[2], k.shape[1]
+    rep = h // kvh
+    qb = min(qb, sq)
+    kb = min(kb, sk)
+    assert sq % qb == 0 and sk % kb == 0
+    nq, nk = sq // qb, sk // kb
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, sk, hd)
+
+    def kv_index(bh, i, j):  # GQA: query head bh reads kv head (bh%h)//rep
+        return (bh // h) * kvh + (bh % h) // rep, j, 0
+
+    out, _, _ = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=hd ** -0.5, causal=causal,
+                          qb=qb, kb=kb, nk=nk, q_offset=q_offset),
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, qb, hd), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, kb, hd), kv_index),
+            pl.BlockSpec((1, kb, hd), kv_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, qb, hd), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, qb), lambda bh, i, j: (bh, i)),
+            pl.BlockSpec((1, qb), lambda bh, i, j: (bh, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, sq, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b * h, sq), jnp.float32),
+            jax.ShapeDtypeStruct((b * h, sq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3).astype(q.dtype)

@@ -1,0 +1,16 @@
+"""jit'd public wrapper for the flash attention kernel."""
+import functools
+
+import jax
+
+from ..common import INTERPRET
+from .kernel import flash_attention_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_offset", "qb",
+                                              "kb", "interpret"))
+def flash_attention(q, k, v, causal: bool = True, q_offset: int = 0,
+                    qb: int = 256, kb: int = 256,
+                    interpret: bool = INTERPRET):
+    return flash_attention_pallas(q, k, v, causal=causal, q_offset=q_offset,
+                                  qb=qb, kb=kb, interpret=interpret)

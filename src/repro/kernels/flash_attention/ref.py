@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for flash attention (naive SDPA, grouped GQA)."""
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool, q_offset: int = 0):
+    b, sq, h, hd = q.shape
+    kvh, sk = k.shape[2], k.shape[1]
+    rep = h // kvh
+    qg = q.reshape(b, sq, kvh, rep, hd).astype(jnp.float32)
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k.astype(jnp.float32))
+    scores = scores / (hd ** 0.5)
+    if causal:
+        qpos = q_offset + jnp.arange(sq)[:, None]
+        mask = qpos >= jnp.arange(sk)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)

@@ -1,0 +1,4 @@
+from .ops import merge_sorted
+from .ref import merge_sorted_ref
+
+__all__ = ["merge_sorted", "merge_sorted_ref"]

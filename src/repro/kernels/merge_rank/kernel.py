@@ -1,0 +1,51 @@
+"""Merge-rank kernel — ingest (minor-compaction) hot path.
+
+Merging the sorted memtable batch into the tablet's sorted run is Accumulo's
+minor compaction. Sequential two-pointer merge is a CPU idiom; the TPU
+adaptation computes each element's *rank in the other run* with VMEM-tiled
+branch-free lexicographic compares (same structure as sorted_search, but on
+(row, col) key pairs):
+
+    merged_pos(a_i) = i + |{ b : b <  a_i }|      (strict)
+    merged_pos(b_j) = j + |{ a : a <= b_j }|      (non-strict, keeps A-side
+                                                   entries first on ties so
+                                                   the newer B side wins a
+                                                   later dedup pass)
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _merge_rank_kernel(qr_ref, qc_ref, tr_ref, tc_ref, o_ref, *, strict: bool):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    qr, qc = qr_ref[...], qc_ref[...]   # (bq, 1)
+    tr, tc = tr_ref[...], tc_ref[...]   # (1, bt)
+    second = (tc < qc) if strict else (tc <= qc)
+    less = (tr < qr) | ((tr == qr) & second)
+    o_ref[...] += jnp.sum(less.astype(jnp.int32), axis=1, keepdims=True)
+
+
+def pair_rank_pallas(tr, tc, qr, qc, *, strict: bool,
+                     block_q: int = 256, block_t: int = 2048,
+                     interpret: bool = True):
+    """Rank of each (qr, qc) pair within the sorted (tr, tc) run."""
+    n_q, n_t = qr.shape[0], tr.shape[1]
+    grid = (n_q // block_q, n_t // block_t)
+    qspec = pl.BlockSpec((block_q, 1), lambda i, j: (i, 0))
+    tspec = pl.BlockSpec((1, block_t), lambda i, j: (0, j))
+    return pl.pallas_call(
+        functools.partial(_merge_rank_kernel, strict=strict),
+        grid=grid,
+        in_specs=[qspec, qspec, tspec, tspec],
+        out_specs=pl.BlockSpec((block_q, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_q, 1), jnp.int32),
+        interpret=interpret,
+    )(qr, qc, tr, tc)

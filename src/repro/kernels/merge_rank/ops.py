@@ -1,0 +1,56 @@
+"""jit'd wrapper: merge two sorted (row, col, val) runs by rank + scatter.
+
+Invalid entries in either run must carry key (I32_MAX, I32_MAX); they sort
+to the tail of the merged output naturally, so fixed-capacity tablets merge
+without knowing their valid counts inside the kernel.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import INTERPRET, I32_MAX, pad_to
+from .kernel import pair_rank_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_t", "interpret"))
+def merge_sorted(ar, ac, av, br, bc, bv, block_q: int = 256,
+                 block_t: int = 2048, interpret: bool = INTERPRET):
+    """Merge sorted runs A and B (each sorted lex by (r, c), pads = I32_MAX).
+
+    Returns (r, c, v) of length len(A)+len(B); valid entries first in sorted
+    order, A-side entries preceding B-side entries on equal keys (so a later
+    dedup pass can implement last-wins for the newer B side).
+    """
+    n_a, n_b = ar.shape[0], br.shape[0]
+    ar_p, _ = pad_to(ar.astype(jnp.int32), block_q, 0, I32_MAX)
+    ac_p, _ = pad_to(ac.astype(jnp.int32), block_q, 0, I32_MAX)
+    br_p, _ = pad_to(br.astype(jnp.int32), block_q, 0, I32_MAX)
+    bc_p, _ = pad_to(bc.astype(jnp.int32), block_q, 0, I32_MAX)
+    at_r, _ = pad_to(ar.astype(jnp.int32).reshape(1, -1), block_t, 1, I32_MAX)
+    at_c, _ = pad_to(ac.astype(jnp.int32).reshape(1, -1), block_t, 1, I32_MAX)
+    bt_r, _ = pad_to(br.astype(jnp.int32).reshape(1, -1), block_t, 1, I32_MAX)
+    bt_c, _ = pad_to(bc.astype(jnp.int32).reshape(1, -1), block_t, 1, I32_MAX)
+
+    rank_a = pair_rank_pallas(bt_r, bt_c, ar_p.reshape(-1, 1), ac_p.reshape(-1, 1),
+                              strict=True, block_q=block_q, block_t=block_t,
+                              interpret=interpret)[: n_a, 0]
+    rank_b = pair_rank_pallas(at_r, at_c, br_p.reshape(-1, 1), bc_p.reshape(-1, 1),
+                              strict=False, block_q=block_q, block_t=block_t,
+                              interpret=interpret)[: n_b, 0]
+    # rank counts include the other side's I32_MAX pads only for pad queries,
+    # which always land at/after position len(valid A)+len(valid B).
+    pos_a = jnp.minimum(jnp.arange(n_a, dtype=jnp.int32) + rank_a, n_a + n_b - 1)
+    pos_b = jnp.minimum(jnp.arange(n_b, dtype=jnp.int32) + rank_b, n_a + n_b - 1)
+
+    out_r = jnp.full((n_a + n_b,), I32_MAX, dtype=jnp.int32)
+    out_c = jnp.full((n_a + n_b,), I32_MAX, dtype=jnp.int32)
+    out_v = jnp.zeros((n_a + n_b,), dtype=av.dtype)
+    # scatter pads first is unnecessary: pad positions are disjoint from
+    # valid positions; among-pad collisions are harmless (pad over pad).
+    out_r = out_r.at[pos_b].set(br.astype(jnp.int32)).at[pos_a].set(ar.astype(jnp.int32))
+    out_c = out_c.at[pos_b].set(bc.astype(jnp.int32)).at[pos_a].set(ac.astype(jnp.int32))
+    out_v = out_v.at[pos_b].set(bv).at[pos_a].set(av)
+    # valid A entries can never share a slot with valid B entries; pads from
+    # A (written last) may overwrite pads from B — both are I32_MAX, fine.
+    return out_r, out_c, out_v

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle: stable merge of two (row, col, val) sorted runs."""
+import jax.numpy as jnp
+
+
+def merge_sorted_ref(ar, ac, av, br, bc, bv):
+    """Concatenate + stable lexicographic sort (A entries precede ties)."""
+    r = jnp.concatenate([ar, br])
+    c = jnp.concatenate([ac, bc])
+    v = jnp.concatenate([av, bv])
+    side = jnp.concatenate([jnp.zeros_like(ar), jnp.ones_like(br)])
+    order = jnp.lexsort((side, c, r))
+    return r[order], c[order], v[order]

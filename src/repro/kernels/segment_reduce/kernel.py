@@ -1,0 +1,50 @@
+"""Segment-sum kernel — the degree-table combiner iterator (paper §III-B).
+
+Accumulo maintains the D4M 2.0 degree table with a server-side *combiner*
+iterator (streaming scatter-add). TPUs scatter poorly but matmul superbly,
+so the adaptation reduces each block with a one-hot × values matmul on the
+MXU:  out[s] += Σ_n 1[ids_n == s] · v_n  =  (vᵀ · onehot)(1, bs).
+
+Grid = (segment_tiles, id_blocks); the id-block axis is innermost so each
+output tile accumulates sequentially in VMEM.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _segsum_kernel(ids_ref, val_ref, o_ref, *, block_s: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    i = pl.program_id(0)
+    ids = ids_ref[...]                      # (bn, 1) int32, pad = -1
+    vals = val_ref[...].astype(jnp.float32)  # (bn, 1)
+    local = ids - i * block_s                # segment id within this tile
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (ids.shape[0], block_s), 1)
+    onehot = (local == lanes).astype(jnp.float32)   # (bn, bs); pads match none
+    o_ref[...] += jnp.dot(vals.T, onehot,
+                          preferred_element_type=jnp.float32)  # (1, bs) MXU
+
+
+def segment_sum_pallas(ids, vals, *, n_segments: int,
+                       block_n: int = 1024, block_s: int = 512,
+                       interpret: bool = True):
+    """ids: (N, 1) int32 (pad -1); vals: (N, 1); out: (1, S) f32."""
+    import functools
+    n = ids.shape[0]
+    grid = (n_segments // block_s, n // block_n)
+    return pl.pallas_call(
+        functools.partial(_segsum_kernel, block_s=block_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n_segments), jnp.float32),
+        interpret=interpret,
+    )(ids, vals)

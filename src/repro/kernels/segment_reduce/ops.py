@@ -1,0 +1,23 @@
+"""jit'd public wrapper for the segment_reduce (combiner) kernel."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import INTERPRET, pad_to
+from .kernel import segment_sum_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("n_segments", "block_n", "block_s",
+                                              "interpret"))
+def segment_sum(ids: jax.Array, vals: jax.Array, n_segments: int,
+                block_n: int = 1024, block_s: int = 512,
+                interpret: bool = INTERPRET) -> jax.Array:
+    """Sum ``vals`` into ``n_segments`` buckets by ``ids`` (ids < 0 dropped)."""
+    ids_p, _ = pad_to(ids.astype(jnp.int32).reshape(-1, 1), block_n, 0, -1)
+    vals_p, _ = pad_to(vals.astype(jnp.float32).reshape(-1, 1), block_n, 0, 0.0)
+    s_pad = -(-n_segments // block_s) * block_s
+    out = segment_sum_pallas(ids_p, vals_p, n_segments=s_pad,
+                             block_n=block_n, block_s=block_s,
+                             interpret=interpret)
+    return out[0, :n_segments]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for segment_reduce."""
+import jax.numpy as jnp
+
+
+def segment_sum_ref(ids, vals, n_segments: int):
+    """Scatter-add; ids < 0 are dropped."""
+    valid = ids >= 0
+    safe = jnp.where(valid, ids, 0)
+    contrib = jnp.where(valid, vals.astype(jnp.float32), 0.0)
+    return jnp.zeros((n_segments,), jnp.float32).at[safe].add(contrib)

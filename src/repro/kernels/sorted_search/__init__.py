@@ -1,0 +1,4 @@
+from .ops import sorted_search
+from .ref import sorted_search_ref
+
+__all__ = ["sorted_search", "sorted_search_ref"]

@@ -1,0 +1,24 @@
+"""jit'd public wrapper for the sorted_search kernel."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import INTERPRET, I32_MAX, pad_to
+from .kernel import rank_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("side", "block_q", "block_t", "interpret"))
+def sorted_search(tab: jax.Array, q: jax.Array, side: str = "left",
+                  block_q: int = 256, block_t: int = 2048,
+                  interpret: bool = INTERPRET) -> jax.Array:
+    """Vectorized searchsorted: positions of ``q`` in sorted 1-D ``tab``.
+
+    ``tab`` must be padded with I32_MAX beyond its valid prefix (the pad
+    never counts: every real query is < I32_MAX).
+    """
+    q2, n_q = pad_to(q.astype(jnp.int32).reshape(-1, 1), block_q, 0, 0)
+    tab2, _ = pad_to(tab.astype(jnp.int32).reshape(1, -1), block_t, 1, I32_MAX)
+    out = rank_pallas(tab2, q2, strict=(side == "left"),
+                      block_q=block_q, block_t=block_t, interpret=interpret)
+    return out[:n_q, 0]

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for sorted_search."""
+import jax.numpy as jnp
+
+
+def sorted_search_ref(tab, n_valid, q, side: str = "left"):
+    """searchsorted over the valid prefix of ``tab``."""
+    return jnp.searchsorted(tab[:n_valid], q, side=side).astype(jnp.int32)

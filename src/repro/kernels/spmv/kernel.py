@@ -1,0 +1,50 @@
+"""Blocked-ELL SpMV kernel — associative-array matvec (graph BFS, Fig. 1).
+
+The paper's point is that BFS *is* sparse matrix-vector multiply. CSR SpMV
+with per-row pointer chasing is a CPU idiom; the TPU adaptation pads rows to
+a fixed nnz/row (ELL), tiles x into VMEM, and accumulates per x-tile with
+masked vectorized gathers — branch-free, fixed shapes.
+
+Grid = (row_blocks, x_tiles), x-tile axis innermost for in-place accumulate.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmv_kernel(cols_ref, vals_ref, x_ref, o_ref, *, block_c: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    cols = cols_ref[...]                  # (br, K) int32, pad = -1
+    vals = vals_ref[...]                  # (br, K) f32
+    x = x_ref[...]                        # (1, bc) f32
+    local = cols - j * block_c
+    in_tile = (local >= 0) & (local < block_c) & (cols >= 0)
+    xi = jnp.take(x[0], jnp.clip(local, 0, block_c - 1))
+    contrib = jnp.where(in_tile, vals * xi, 0.0)
+    o_ref[...] += jnp.sum(contrib, axis=1, keepdims=True)
+
+
+def spmv_ell_pallas(cols, vals, x, *, block_r: int = 256, block_c: int = 2048,
+                    interpret: bool = True):
+    """cols/vals: (R, K) ELL; x: (1, C); returns (R, 1) f32."""
+    n_r, n_c = cols.shape[0], x.shape[1]
+    grid = (n_r // block_r, n_c // block_c)
+    return pl.pallas_call(
+        functools.partial(_spmv_kernel, block_c=block_c),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, cols.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_r, cols.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_c), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_r, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_r, 1), jnp.float32),
+        interpret=interpret,
+    )(cols, vals, x)

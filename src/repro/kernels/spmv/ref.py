@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for ELL SpMV."""
+import jax.numpy as jnp
+
+
+def spmv_ell_ref(cols, vals, x):
+    """y[r] = sum_k vals[r,k] * x[cols[r,k]], entries with col < 0 dropped."""
+    valid = cols >= 0
+    xi = jnp.take(x, jnp.clip(cols, 0, x.shape[0] - 1))
+    return jnp.sum(jnp.where(valid, vals * xi, 0.0), axis=1)

@@ -1,0 +1,165 @@
+"""Roofline-term derivation from compiled dry-run artifacts (DESIGN §6).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+  compute    = HLO flops (per device)  / 197e12
+  memory     = HLO bytes (per device)  / 819e9
+  collective = per-device link traffic / 50e9, traffic per op from ring
+               costs applied to the partitioned-HLO operand shapes:
+                 all-reduce       2·S·(n-1)/n     (S = per-device payload)
+                 all-gather       S_full·(n-1)/n
+                 reduce-scatter   S_full·(n-1)/n
+                 all-to-all       S·(n-1)/n
+                 collective-permute  S
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shapes>\([^)]*\)|\S+)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_kind: Dict[str, float]     # per-device link traffic
+    payload_by_kind: Dict[str, float]   # raw payload bytes
+    link_bytes_total: float
+
+
+def parse_collectives(hlo: str) -> CollectiveStats:
+    counts: Dict[str, int] = defaultdict(int)
+    link: Dict[str, float] = defaultdict(float)
+    payload: Dict[str, float] = defaultdict(float)
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        op = m.group("op")
+        s = _shape_bytes(m.group("shapes"))  # output shape(s), per device
+        n = _group_size(line)
+        if n <= 1:
+            continue
+        if op == "all-reduce":
+            traffic = 2.0 * s * (n - 1) / n
+        elif op == "all-gather":
+            traffic = s * (n - 1) / n            # output is the full gather
+        elif op == "reduce-scatter":
+            traffic = s * (n - 1)                # output is one shard
+        elif op == "all-to-all":
+            traffic = s * (n - 1) / n
+        else:  # collective-permute
+            traffic = float(s)
+        counts[op] += 1
+        link[op] += traffic
+        payload[op] += float(s)
+    return CollectiveStats(dict(counts), dict(link), dict(payload),
+                           sum(link.values()))
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collectives: CollectiveStats
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float                  # analytic 6·N·D (or 2·N·D fwd-only)
+    useful_ratio: float                 # model_flops / (hlo flops × chips)
+    per_device_hbm_bytes: float         # args+temps from memory_analysis
+    bytes_lower: float = 0.0            # perfect-fusion bound
+    bytes_upper: float = 0.0            # every-op-hits-HBM bound
+
+    def table_row(self) -> Dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "bottleneck": self.bottleneck,
+            "useful_ratio": self.useful_ratio,
+            "hbm_gb": self.per_device_hbm_bytes / 1e9,
+            "collective_counts": self.collectives.counts,
+        }
+
+
+def analyze(compiled, n_chips: int, model_flops: float) -> Roofline:
+    """Loop-aware cost from hlo_cost (XLA's cost_analysis counts while
+    bodies once — see hlo_cost.py); memory_analysis for peak HBM."""
+    from .hlo_cost import HloCostModel
+    model = HloCostModel(compiled.as_text())
+    cost = model.cost()
+    flops = cost.flops
+    # memory term: geometric mean of the perfect-fusion lower bound and the
+    # every-op-hits-HBM upper bound (CPU fusion granularity != TPU; the true
+    # value lives between — both bounds are recorded per cell)
+    byts = (cost.bytes_ideal * cost.bytes) ** 0.5
+    colls = CollectiveStats(dict(cost.coll_counts), dict(cost.coll_link),
+                            {}, cost.link_bytes)
+    ma = compiled.memory_analysis()
+    hbm = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+           + ma.output_size_in_bytes)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    coll_s = colls.link_bytes_total / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    useful = model_flops / max(flops * n_chips, 1.0)
+    roof = Roofline(flops, byts, colls, compute_s, memory_s, coll_s,
+                     bottleneck, model_flops, useful, hbm)
+    roof.bytes_lower = cost.bytes_ideal
+    roof.bytes_upper = cost.bytes
+    return roof
+
+
+def model_flops_for(cfg, shape_kind: str, seq: int, gb: int) -> float:
+    """6·N·D for training, 2·N·D for forward-only steps (N excludes the
+    embedding table; MoE uses active params)."""
+    n = cfg.n_params_active() - cfg.vocab_padded * cfg.d_model
+    if shape_kind == "train":
+        return 6.0 * n * seq * gb
+    if shape_kind == "prefill":
+        return 2.0 * n * seq * gb
+    return 2.0 * n * gb  # decode: one token per sequence

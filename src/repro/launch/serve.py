@@ -1,0 +1,47 @@
+"""Serving driver: batched requests against a (reduced) LM on CPU, or the
+decode-cell dry-run on the production mesh.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
+      --requests 8 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from ..configs import get_config, get_reduced
+from ..models import build, init_params
+from ..serve.engine import Engine, Request
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    model = build(cfg)
+    params = init_params(model.param_specs, jax.random.key(0))
+    engine = Engine(model, params, batch_slots=args.slots,
+                    max_len=args.max_len)
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(1, cfg.vocab, rng.integers(4, 24))
+                    .astype(np.int32), max_new=args.max_new)
+            for _ in range(args.requests)]
+    stats = engine.run(reqs)
+    print(f"served {len(reqs)} requests, {stats['tokens_out']} tokens in "
+          f"{stats['wall_s']:.2f}s -> {stats['tok_per_s']:.1f} tok/s")
+    assert all(r.out is not None and len(r.out) > 0 for r in reqs)
+    return stats
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from .api import Model, build
+from .config import ModelConfig
+from .spec import (PSpec, ShardingRules, init_params, make_sharder,
+                   param_count, pspec_tree, sds_tree, sharding_tree)
+
+__all__ = ["Model", "build", "ModelConfig", "PSpec", "ShardingRules",
+           "init_params", "make_sharder", "param_count", "pspec_tree",
+           "sds_tree", "sharding_tree"]

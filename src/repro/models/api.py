@@ -1,0 +1,163 @@
+"""Unified model API: build(cfg) returns step fns + input/cache specs for
+every shape kind (train_4k / prefill_32k / decode_32k / long_500k).
+
+Everything is expressed as PSpec trees so the same declaration drives CPU
+smoke tests (real arrays), the multi-pod dry-run (ShapeDtypeStructs), and
+sharding assignment (logical axes)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax.numpy as jnp
+
+from . import encdec, hybrid, mamba2, transformer, vlm
+from .config import ModelConfig
+from .spec import PSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    param_specs: Any
+    train_loss: Callable          # (params, batch, sh, remat) -> loss
+    prefill: Callable             # (params, batch, sh) -> (logits, state)
+    decode: Callable              # (params, batch, sh) -> (logits, state)
+    train_input_specs: Callable   # (gb, seq) -> PSpec dict
+    prefill_input_specs: Callable
+    decode_input_specs: Callable  # (gb, seq) -> PSpec dict (incl cache, pos)
+
+
+def _tok_spec(gb: int, s: int) -> PSpec:
+    return PSpec((gb, s), ("batch", None), jnp.int32, "zeros")
+
+
+def build(cfg: ModelConfig) -> Model:  # noqa: C901 (dispatch table)
+    f = cfg.family
+
+    if f in ("dense", "moe"):
+        def train(p, b, sh, remat="dots_no_batch"):
+            return transformer.train_loss(cfg, p, b, sh, remat)
+
+        def prefill(p, b, sh):
+            return transformer.prefill(cfg, p, b["tokens"], sh)
+
+        def decode(p, b, sh):
+            return transformer.decode_step(cfg, p, b["token"], b["cache"],
+                                           b["pos"], sh)
+
+        def train_in(gb, s):
+            return {"tokens": _tok_spec(gb, s)}
+
+        def prefill_in(gb, s):
+            return {"tokens": _tok_spec(gb, s)}
+
+        def decode_in(gb, s):
+            return {"token": _tok_spec(gb, 1),
+                    "pos": PSpec((), (), jnp.int32, "zeros"),
+                    "cache": transformer.cache_specs(cfg, gb, s)}
+
+        return Model(cfg, transformer.param_specs(cfg), train, prefill,
+                     decode, train_in, prefill_in, decode_in)
+
+    if f == "vlm":
+        n_img = cfg.n_img_tokens
+
+        def train(p, b, sh, remat="dots_no_batch"):
+            return vlm.train_loss(cfg, p, b, sh, remat)
+
+        def prefill(p, b, sh):
+            return vlm.prefill(cfg, p, b["img_embeds"], b["tokens"], sh)
+
+        def decode(p, b, sh):
+            return vlm.decode_step(cfg, p, b["token"], b["cache"], b["pos"], sh)
+
+        def train_in(gb, s):
+            return {"tokens": _tok_spec(gb, s - n_img),
+                    "img_embeds": PSpec((gb, n_img, cfg.d_model),
+                                        ("batch", None, None), cfg.dtype)}
+
+        def prefill_in(gb, s):
+            return train_in(gb, s)
+
+        def decode_in(gb, s):
+            return {"token": _tok_spec(gb, 1),
+                    "pos": PSpec((), (), jnp.int32, "zeros"),
+                    "cache": vlm.cache_specs(cfg, gb, s)}
+
+        return Model(cfg, vlm.param_specs(cfg), train, prefill, decode,
+                     train_in, prefill_in, decode_in)
+
+    if f == "encdec":
+        def train(p, b, sh, remat="dots_no_batch"):
+            return encdec.train_loss(cfg, p, b, sh, remat)
+
+        def prefill(p, b, sh):
+            return encdec.prefill(cfg, p, b["frames"], b["tokens"], sh)
+
+        def decode(p, b, sh):
+            return encdec.decode_step(cfg, p, b["token"], b["cache"],
+                                      b["cross"], b["pos"], sh)
+
+        def frames_spec(gb):
+            return PSpec((gb, cfg.n_frames, cfg.d_model),
+                         ("batch", None, None), cfg.dtype)
+
+        def train_in(gb, s):
+            return {"tokens": _tok_spec(gb, s), "frames": frames_spec(gb)}
+
+        def prefill_in(gb, s):
+            return train_in(gb, s)
+
+        def decode_in(gb, s):
+            cache, cross = encdec.cache_specs(cfg, gb, s)
+            return {"token": _tok_spec(gb, 1),
+                    "pos": PSpec((), (), jnp.int32, "zeros"),
+                    "cache": cache, "cross": cross}
+
+        return Model(cfg, encdec.param_specs(cfg), train, prefill, decode,
+                     train_in, prefill_in, decode_in)
+
+    if f == "ssm":
+        def train(p, b, sh, remat="dots_no_batch"):
+            return mamba2.train_loss(cfg, p, b, sh, remat)
+
+        def prefill(p, b, sh):
+            return mamba2.prefill(cfg, p, b["tokens"], sh)
+
+        def decode(p, b, sh):
+            return mamba2.decode_step(cfg, p, b["token"], b["cache"], sh)
+
+        def train_in(gb, s):
+            return {"tokens": _tok_spec(gb, s)}
+
+        def decode_in(gb, s):  # state is O(1) in s — the SSM selling point
+            return {"token": _tok_spec(gb, 1),
+                    "cache": mamba2.state_specs(cfg, gb)}
+
+        return Model(cfg, mamba2.param_specs(cfg), train, prefill, decode,
+                     train_in, train_in, decode_in)
+
+    if f == "hybrid":
+        def train(p, b, sh, remat="dots_no_batch"):
+            return hybrid.train_loss(cfg, p, b, sh, remat)
+
+        def prefill(p, b, sh):
+            return hybrid.prefill(cfg, p, b["tokens"], sh)
+
+        def decode(p, b, sh):
+            return hybrid.decode_step(cfg, p, b["token"], b["cache"],
+                                      b["pos"], sh)
+
+        def train_in(gb, s):
+            return {"tokens": _tok_spec(gb, s)}
+
+        def decode_in(gb, s):
+            return {"token": _tok_spec(gb, 1),
+                    "pos": PSpec((), (), jnp.int32, "zeros"),
+                    "cache": hybrid.state_specs(cfg, gb, s)}
+
+        return Model(cfg, hybrid.param_specs(cfg), train, prefill, decode,
+                     train_in, train_in, decode_in)
+
+    raise ValueError(f"unknown family {f!r}")

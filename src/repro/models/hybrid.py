@@ -1,0 +1,163 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention+MLP block
+applied every ``shared_attn_every`` layers with per-invocation input norms.
+
+Simplifications vs. Zamba2 (noted in DESIGN.md): the shared block consumes
+the running stream (not concat with the raw embedding) and per-invocation
+LoRA specialization is replaced by per-invocation norms. The structure that
+matters for systems purposes — O(1)-state Mamba layers + a small number of
+full-attention applications sharing one weight set — is preserved; long-
+context decode cost is dominated by the shared block's KV cache, exactly as
+in Zamba2.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, mamba2
+from .config import ModelConfig
+from .spec import PSpec
+from .transformer import REMAT_POLICIES
+
+
+def _groups(cfg: ModelConfig) -> Tuple[int, int]:
+    per = cfg.shared_attn_every
+    assert cfg.n_layers % per == 0
+    return cfg.n_layers // per, per
+
+
+def param_specs(cfg: ModelConfig) -> Dict:
+    g, per = _groups(cfg)
+    return {
+        "embed": layers.embed_specs(cfg),
+        "mamba_blocks": {
+            "ln": layers.norm_specs(cfg, (g, per)),
+            "mamba": mamba2.mamba_specs(cfg, (g, per)),
+        },
+        "shared": {
+            "attn": layers.attn_specs(cfg),
+            "mlp": layers.mlp_specs(cfg),
+        },
+        "inv_ln1": layers.norm_specs(cfg, (g,)),
+        "inv_ln2": layers.norm_specs(cfg, (g,)),
+        "final_norm": layers.norm_specs(cfg),
+    }
+
+
+def _shared_block(cfg, params, p_ln1, p_ln2, x, positions, sh,
+                  cache=None, cache_pos=None):
+    h, kv = layers.attention(cfg, params["shared"]["attn"],
+                             layers.apply_norm(cfg, p_ln1, x), positions, sh,
+                             causal=True, cache=cache, cache_pos=cache_pos)
+    x = x + h
+    h = layers.apply_mlp(cfg, params["shared"]["mlp"],
+                         layers.apply_norm(cfg, p_ln2, x), sh)
+    return x + h, kv
+
+
+def train_loss(cfg: ModelConfig, params: Dict, batch: Dict, sh,
+               remat: str = "dots_no_batch") -> jax.Array:
+    tokens = batch["tokens"]
+    x = layers.embed_tokens(params["embed"], tokens)
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+
+    def group_body(carry, xs):
+        mblk, ln1, ln2 = xs
+
+        def inner(c, blk):
+            h, _ = mamba2.apply_mamba(
+                cfg, blk["mamba"], layers.apply_norm(cfg, blk["ln"], c), sh)
+            return c + h, None
+
+        y, _ = jax.lax.scan(inner, carry, mblk)
+        y, _ = _shared_block(cfg, params, ln1, ln2, y, positions, sh)
+        return y, None
+
+    if remat != "none":
+        group_body = jax.checkpoint(group_body, policy=REMAT_POLICIES[remat],
+                                    prevent_cse=False)
+    x, _ = jax.lax.scan(group_body, x,
+                        (params["mamba_blocks"], params["inv_ln1"],
+                         params["inv_ln2"]))
+    x = layers.apply_norm(cfg, params["final_norm"], x)
+    logits = layers.unembed(cfg, params["embed"], x, sh)
+    labels = jnp.concatenate([tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], 1)
+    mask = jnp.concatenate(
+        [jnp.ones_like(tokens[:, 1:], jnp.float32),
+         jnp.zeros_like(tokens[:, :1], jnp.float32)], 1)
+    return layers.softmax_xent(cfg, logits, labels, mask)
+
+
+def prefill(cfg: ModelConfig, params: Dict, tokens, sh, max_len=None):
+    b, s = tokens.shape
+    smax = max_len or s
+    x = layers.embed_tokens(params["embed"], tokens)
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def group_body(carry, xs):
+        mblk, ln1, ln2 = xs
+
+        def inner(c, blk):
+            h, st = mamba2.apply_mamba(
+                cfg, blk["mamba"], layers.apply_norm(cfg, blk["ln"], c), sh,
+                return_state=True)
+            return c + h, st
+
+        y, mstates = jax.lax.scan(inner, carry, mblk)
+        ck = jnp.zeros((b, smax, cfg.n_kv_heads, cfg.hd), cfg.dtype)
+        cv = jnp.zeros((b, smax, cfg.n_kv_heads, cfg.hd), cfg.dtype)
+        y, kv = _shared_block(cfg, params, ln1, ln2, y, positions, sh,
+                              cache=(ck, cv), cache_pos=0)
+        return y, (mstates, kv)
+
+    x, (mstates, kvs) = jax.lax.scan(
+        group_body, x, (params["mamba_blocks"], params["inv_ln1"],
+                        params["inv_ln2"]))
+    x = layers.apply_norm(cfg, params["final_norm"], x)
+    logits = layers.unembed(cfg, params["embed"], x[:, -1:], sh)
+    return logits, (mstates, kvs)
+
+
+def decode_step(cfg: ModelConfig, params: Dict, token, states, pos, sh):
+    """states = ((ssm [G,per,B,H,P,N], conv [G,per,B,K-1,C]),
+                 (ck [G,B,Smax,KV,hd], cv [G,B,Smax,KV,hd]))."""
+    (ssm, conv), (ck, cv) = states
+    x = layers.embed_tokens(params["embed"], token)[:, 0, :]
+    positions = pos + jnp.zeros((1,), jnp.int32)
+
+    def group_body(carry, xs):
+        mblk, ln1, ln2, ss_g, cs_g, ck_g, cv_g = xs
+
+        def inner(c, blk_state):
+            blk, ss, cs = blk_state
+            xn = layers.apply_norm(cfg, blk["ln"], c[:, None, :])[:, 0, :]
+            h, new_ss, new_cs = mamba2.mamba_decode(cfg, blk["mamba"], xn,
+                                                    ss, cs, sh)
+            return c + h, (new_ss, new_cs)
+
+        y, new_m = jax.lax.scan(inner, carry, (mblk, ss_g, cs_g))
+        y2, kv = _shared_block(cfg, params, ln1, ln2, y[:, None, :], positions,
+                               sh, cache=(ck_g, cv_g), cache_pos=pos)
+        return y2[:, 0, :], (new_m, kv)
+
+    x, (new_m, new_kv) = jax.lax.scan(
+        group_body, x,
+        (params["mamba_blocks"], params["inv_ln1"], params["inv_ln2"],
+         ssm, conv, ck, cv))
+    x = layers.apply_norm(cfg, params["final_norm"], x[:, None, :])
+    logits = layers.unembed(cfg, params["embed"], x, sh)
+    return logits, (new_m, new_kv)
+
+
+def state_specs(cfg: ModelConfig, batch: int, max_len: int):
+    g, per = _groups(cfg)
+    di, n = cfg.d_inner, cfg.ssm_state
+    ssm = PSpec((g, per, batch, cfg.ssm_heads, cfg.ssm_headdim, n),
+                (None, None, "batch", None, None, None), jnp.float32, "zeros")
+    conv = PSpec((g, per, batch, cfg.ssm_conv - 1, di + 2 * n),
+                 (None, None, "batch", None, "d_inner"), cfg.dtype, "zeros")
+    kv = PSpec((g, batch, max_len, cfg.n_kv_heads, cfg.hd),
+               (None, "batch", "kv_seq", None, None), cfg.dtype, "zeros")
+    return ((ssm, conv), (kv, kv))

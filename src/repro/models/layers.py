@@ -1,0 +1,319 @@
+"""Shared transformer layers: norms, RoPE, GQA attention (+KV cache), MLPs.
+
+Functional style: params are dict pytrees declared via PSpec (spec.py);
+every forward takes an activation-sharding hook ``sh`` (identity on CPU).
+All math in bf16 with f32 softmax/norm accumulations.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .spec import PSpec
+
+
+# ------------------------------------------------------------------- norms
+def norm_specs(cfg: ModelConfig, prefix_shape=()) -> Dict:
+    base = {"scale": PSpec(prefix_shape + (cfg.d_model,),
+                           tuple([None] * len(prefix_shape)) + (None,),
+                           dtype=jnp.float32, init="ones")}
+    if cfg.norm == "layernorm":
+        base["bias"] = PSpec(prefix_shape + (cfg.d_model,),
+                             tuple([None] * len(prefix_shape)) + (None,),
+                             dtype=jnp.float32, init="zeros")
+    return base
+
+
+def apply_norm(cfg: ModelConfig, p: Dict, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+    else:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6) + 0.0
+    y = y * p["scale"]
+    if cfg.norm == "layernorm":
+        y = y + p["bias"]
+    return y.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- rope
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, hd]; positions: [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # [...,S,1,half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------- attention
+def attn_specs(cfg: ModelConfig, L=(), n_heads=None, n_kv=None) -> Dict:
+    h = n_heads or cfg.n_heads
+    kv = n_kv or cfg.n_kv_heads
+    d, hd = cfg.d_model, cfg.hd
+    lax_ = tuple([None] * len(L))
+    dt = cfg.dtype
+    p = {
+        "wq": PSpec(L + (d, h * hd), lax_ + ("embed", "heads"), dt),
+        "wk": PSpec(L + (d, kv * hd), lax_ + ("embed", "kv_heads"), dt),
+        "wv": PSpec(L + (d, kv * hd), lax_ + ("embed", "kv_heads"), dt),
+        "wo": PSpec(L + (h * hd, d), lax_ + ("heads", "embed"), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = PSpec(L + (h * hd,), lax_ + ("heads",), jnp.float32, "zeros")
+        p["bk"] = PSpec(L + (kv * hd,), lax_ + ("kv_heads",), jnp.float32, "zeros")
+        p["bv"] = PSpec(L + (kv * hd,), lax_ + ("kv_heads",), jnp.float32, "zeros")
+    return p
+
+
+def _project_qkv(cfg, p, x, sh, n_heads, n_kv):
+    hd = cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = sh(q, "batch", "seq_inner", "heads")
+    k = sh(k, "batch", "seq_inner", "kv_heads")
+    v = sh(v, "batch", "seq_inner", "kv_heads")
+    b, s = x.shape[:2]
+    return (q.reshape(b, s, n_heads, hd), k.reshape(b, s, n_kv, hd),
+            v.reshape(b, s, n_kv, hd))
+
+
+BLOCKED_ATTN_MIN_SQ = 4096  # above this, use online-softmax blocked attention
+
+
+def _blocked_sdpa_impl(q, k, v, sh=None, *, causal: bool, q_offset=None,
+                       qb: int = 512, kb: int = 1024):
+    """Flash-style blocked attention in pure jnp (scan over q blocks, online
+    softmax over kv blocks). Peak memory is O(qb·kb) per head-group instead
+    of O(Sq·Sk) — required for the 32k cells; XLA fuses the inner body.
+
+    Causal masking is applied per block pair; blocks entirely above the
+    diagonal still execute (static trip counts) — the ~2x attention-FLOP
+    overhead vs. an ideal kernel is visible in the roofline and addressed in
+    EXPERIMENTS §Perf.
+    """
+    b, sq, h, hd = q.shape
+    kvh, sk = k.shape[2], k.shape[1]
+    rep = h // kvh
+    qb = min(qb, sq)
+    kb = min(kb, sk)
+    assert sq % qb == 0 and sk % kb == 0, (sq, qb, sk, kb)
+    nq, nk = sq // qb, sk // kb
+    scale = hd ** -0.5
+    if sh is None:
+        sh = lambda x, *axes: x  # noqa: E731
+    qg = q.reshape(b, nq, qb, kvh, rep, hd).transpose(1, 0, 3, 4, 2, 5)
+    # context parallelism: shard the q rows of each block over the TP axis.
+    # GQA head counts (2/3/8/9/56...) rarely divide the model axis, so head
+    # sharding degenerates to replication; the qb dim (512) always divides.
+    qg = sh(qg, None, "batch", None, None, "attn_q", None)
+    kg = k.reshape(b, nk, kb, kvh, hd).transpose(1, 0, 3, 2, 4)
+    vg = v.reshape(b, nk, kb, kvh, hd).transpose(1, 0, 3, 2, 4)
+    offs = 0 if q_offset is None else q_offset
+
+    def q_block(_, xs):
+        qb_dat, qi = xs                       # [b,g,r,qb,hd], scalar
+        qpos = offs + qi * qb + jnp.arange(qb)
+
+        def kv_block(carry, xs2):
+            m, l, acc = carry
+            kd, vd, ki = xs2                  # [b,g,kb,hd] x2, scalar
+            s = jnp.einsum("bgrqd,bgkd->bgrqk", qb_dat, kd,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                kpos = ki * kb + jnp.arange(kb)
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            # cast P to bf16 for the PV matmul (standard flash practice:
+            # halves P traffic and feeds the MXU; accumulation stays f32)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bgrqk,bgkd->bgrqd", p.astype(vd.dtype), vd,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, kvh, rep, qb), -jnp.inf, jnp.float32),
+                jnp.zeros((b, kvh, rep, qb), jnp.float32),
+                jnp.zeros((b, kvh, rep, qb, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, init, (kg, vg, jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out
+
+    _, blocks = jax.lax.scan(q_block, None, (qg, jnp.arange(nq)))
+    blocks = sh(blocks, None, "batch", None, None, "attn_q", None)
+    # [nq, b, g, r, qb, hd] -> [b, sq, h, hd]
+    out = blocks.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def _blocked_sdpa(q, k, v, sh=None, *, causal: bool, q_offset=None,
+                  qb: int = 512, kb: int = 1024):
+    """Flash-attention backward = recompute scores: the whole blocked SDPA is
+    its own remat island so a surrounding checkpoint_dots policy can never
+    stash the O(S·kb) score blocks produced inside the scans (which would
+    defeat the blocking entirely)."""
+    fn = jax.checkpoint(
+        lambda q_, k_, v_: _blocked_sdpa_impl(
+            q_, k_, v_, sh, causal=causal, q_offset=q_offset, qb=qb, kb=kb),
+        policy=jax.checkpoint_policies.nothing_saveable, prevent_cse=False)
+    return fn(q, k, v)
+
+
+def _sdpa(q, k, v, *, causal: bool, q_offset=None):
+    """q: [B,Sq,H,hd]; k/v: [B,Sk,KV,hd]. Grouped GQA einsum (no repeat of
+    the KV tensor — matters for 32k-context decode memory). f32 softmax."""
+    b, sq, h, hd = q.shape
+    kvh, sk = k.shape[2], k.shape[1]
+    rep = h // kvh
+    qg = q.reshape(b, sq, kvh, rep, hd)
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k).astype(jnp.float32)
+    scores = scores / (hd ** 0.5)
+    if causal:
+        qpos = jnp.arange(sq)[:, None]
+        if q_offset is not None:
+            qpos = qpos + q_offset
+        mask = qpos >= jnp.arange(sk)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", w.astype(v.dtype), v)
+    return out.reshape(b, sq, h, hd)
+
+
+def attention(cfg: ModelConfig, p: Dict, x: jax.Array, positions, sh,
+              *, causal=True, n_heads=None, n_kv=None, use_rope=True,
+              cache: Optional[Tuple] = None, cache_pos=None):
+    """Self-attention. ``cache=(k,v)`` of shape [B,Smax,KV,hd] enables
+    decode (x is the new token(s)); returns (out, new_cache)."""
+    h = n_heads or cfg.n_heads
+    kv = n_kv or cfg.n_kv_heads
+    q, k, v = _project_qkv(cfg, p, x, sh, h, kv)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    blocked = causal and q.shape[1] >= BLOCKED_ATTN_MIN_SQ
+    if cache is not None:
+        ck, cv = cache
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
+                                                 cache_pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
+                                                 cache_pos, axis=1)
+        ck = sh(ck, "batch", "kv_seq", None, None)
+        cv = sh(cv, "batch", "kv_seq", None, None)
+        if blocked:
+            att = _blocked_sdpa(q, ck, cv, sh, causal=causal,
+                                q_offset=cache_pos)
+        else:
+            att = _sdpa(q, ck, cv, causal=causal, q_offset=cache_pos)
+        new_cache = (ck, cv)
+    else:
+        if blocked:
+            att = _blocked_sdpa(q, k, v, sh, causal=causal)
+        else:
+            att = _sdpa(q, k, v, causal=causal)
+        new_cache = None
+    b, sq = x.shape[:2]
+    att = sh(att.reshape(b, sq, h * cfg.hd), "batch", "seq_inner", "heads")
+    out = jnp.einsum("bsh,hd->bsd", att, p["wo"])
+    return sh(out, "batch", "seq", "model_dim_act"), new_cache
+
+
+def cross_attention(cfg: ModelConfig, p: Dict, x, kv_cache, sh):
+    """Decoder cross-attn over precomputed encoder K/V [B,Senc,KV,hd]."""
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(
+        x.shape[0], x.shape[1], h, hd)
+    k, v = kv_cache
+    att = _sdpa(q, k, v, causal=False)
+    att = att.reshape(x.shape[0], x.shape[1], h * hd)
+    return jnp.einsum("bsh,hd->bsd", att, p["wo"])
+
+
+def cross_kv(cfg: ModelConfig, p: Dict, enc_out: jax.Array):
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    b, s, _ = enc_out.shape
+    k = jnp.einsum("bsd,dh->bsh", enc_out, p["wk"]).reshape(b, s, kvh, hd)
+    v = jnp.einsum("bsd,dh->bsh", enc_out, p["wv"]).reshape(b, s, kvh, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------- mlp
+def mlp_specs(cfg: ModelConfig, L=(), d_ff=None) -> Dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    lax_ = tuple([None] * len(L))
+    dt = cfg.dtype
+    if cfg.mlp == "swiglu":
+        return {
+            "w_gate": PSpec(L + (d, f), lax_ + ("embed", "ff"), dt),
+            "w_up": PSpec(L + (d, f), lax_ + ("embed", "ff"), dt),
+            "w_down": PSpec(L + (f, d), lax_ + ("ff", "embed"), dt),
+        }
+    return {
+        "w_in": PSpec(L + (d, f), lax_ + ("embed", "ff"), dt),
+        "w_out": PSpec(L + (f, d), lax_ + ("ff", "embed"), dt),
+    }
+
+
+def apply_mlp(cfg: ModelConfig, p: Dict, x: jax.Array, sh) -> jax.Array:
+    if cfg.mlp == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        h = sh(jax.nn.silu(g) * u, "batch", "seq_inner", "ff")
+        out = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_in"]))
+        h = sh(h, "batch", "seq_inner", "ff")
+        out = jnp.einsum("bsf,fd->bsd", h, p["w_out"])
+    return sh(out, "batch", "seq", "model_dim_act")
+
+
+# ------------------------------------------------------------------- embed
+def embed_specs(cfg: ModelConfig) -> Dict:
+    d = {"embedding": PSpec((cfg.vocab_padded, cfg.d_model),
+                            ("vocab", "embed"), cfg.dtype)}
+    if not cfg.tie_embeddings:
+        d["lm_head"] = PSpec((cfg.d_model, cfg.vocab_padded),
+                             ("embed", "vocab"), cfg.dtype)
+    return d
+
+
+def embed_tokens(p: Dict, tokens: jax.Array) -> jax.Array:
+    return p["embedding"][tokens]
+
+
+def unembed(cfg: ModelConfig, p: Dict, x: jax.Array, sh) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["embedding"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, p["lm_head"])
+    return sh(logits.astype(jnp.float32), "batch", "seq_unembed", "vocab")
+
+
+def softmax_xent(cfg: ModelConfig, logits: jax.Array, labels: jax.Array,
+                 mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token cross-entropy; pad-vocab columns masked out."""
+    v = logits.shape[-1]
+    logits = jnp.where(jnp.arange(v)[None, None, :] < cfg.vocab, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

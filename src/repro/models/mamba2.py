@@ -1,0 +1,263 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in JAX.
+
+Chunked SSD: intra-chunk quadratic (attention-like, MXU-friendly) term +
+inter-chunk state recurrence via ``lax.scan`` over chunks. Single-token
+state update for decode (the whole point of the arch at long_500k: decode
+cost is O(1) in context length).
+
+Discretization: h_t = exp(dt_t · A) h_{t-1} + dt_t · B_t x_t ;
+y_t = C_t h_t + D x_t, with per-head scalar A < 0, G=1 B/C groups.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ModelConfig
+from .spec import PSpec
+from .transformer import REMAT_POLICIES
+
+
+def mamba_specs(cfg: ModelConfig, L=()) -> Dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    k = cfg.ssm_conv
+    conv_dim = di + 2 * n
+    lax_ = tuple([None] * len(L))
+    dt = cfg.dtype
+    return {
+        "in_proj": PSpec(L + (d, 2 * di + 2 * n + h),
+                         lax_ + ("embed", "d_inner"), dt),
+        "conv_w": PSpec(L + (conv_dim, k), lax_ + ("d_inner", None), dt),
+        "conv_b": PSpec(L + (conv_dim,), lax_ + ("d_inner",), jnp.float32,
+                        "zeros"),
+        "A_log": PSpec(L + (h,), lax_ + (None,), jnp.float32, "ones"),
+        "D": PSpec(L + (h,), lax_ + (None,), jnp.float32, "ones"),
+        "dt_bias": PSpec(L + (h,), lax_ + (None,), jnp.float32, "zeros"),
+        "norm": PSpec(L + (di,), lax_ + ("d_inner",), jnp.float32, "ones"),
+        "out_proj": PSpec(L + (di, d), lax_ + ("d_inner", "embed"), dt),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: [B,S,C]; w: [C,K]; returns silu(conv)."""
+    k = w.shape[-1]
+    s = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, j:j + s, :] * w[:, j].astype(x.dtype) for j in range(k))
+    return jax.nn.silu(out + b.astype(x.dtype))
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n:]
+    return z, xbc, dt
+
+
+def _ssd_chunked(cfg: ModelConfig, x, dt, a_log, b_, c_,
+                 init_state: Optional[jax.Array] = None):
+    """x: [B,S,H,P] (already silu'd conv output); dt: [B,S,H] (softplus'd);
+    b_, c_: [B,S,N] (G=1). Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    bsz, s_orig, h, p = x.shape
+    n = b_.shape[-1]
+    q = min(cfg.ssm_chunk, s_orig)
+    pad = (-s_orig) % q
+    if pad:  # ragged tail: dt=0 padding is exact (decay=1, zero contribution)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_ = jnp.pad(b_, ((0, 0), (0, pad), (0, 0)))
+        c_ = jnp.pad(c_, ((0, 0), (0, pad), (0, 0)))
+    s = s_orig + pad
+    nc = s // q
+    fa = (-jnp.exp(a_log.astype(jnp.float32)))                   # (H,) < 0
+    a = dt * fa                                                  # [B,S,H]
+    xdt = x * dt[..., None].astype(x.dtype)                      # dt-weighted
+
+    # chunked views
+    ac = a.reshape(bsz, nc, q, h)
+    acs = jnp.cumsum(ac, axis=2)                                 # [B,nc,Q,H]
+    xc = xdt.reshape(bsz, nc, q, h, p)
+    bc = b_.reshape(bsz, nc, q, n)
+    cc = c_.reshape(bsz, nc, q, n)
+
+    # intra-chunk (quadratic, MXU)
+    seg = acs[:, :, :, None, :] - acs[:, :, None, :, :]          # [B,nc,Q,K,H]
+    mask = (jnp.arange(q)[:, None] >= jnp.arange(q)[None, :])
+    l_mat = jnp.where(mask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcqn,bckn->bcqk", cc.astype(jnp.float32),
+                    bc.astype(jnp.float32))
+    y_diag = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp",
+                        cb, l_mat, xc.astype(jnp.float32))
+
+    # per-chunk end states
+    decay_out = jnp.exp(acs[:, :, -1:, :] - acs)                 # [B,nc,Q,H]
+    states = jnp.einsum("bckn,bckh,bckhp->bchpn", bc.astype(jnp.float32),
+                        decay_out, xc.astype(jnp.float32))
+    chunk_decay = jnp.exp(acs[:, :, -1, :])                      # [B,nc,H]
+
+    # inter-chunk recurrence
+    h0 = (jnp.zeros((bsz, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def scan_fn(carry, xs):
+        st, dec = xs                                             # [B,H,P,N],[B,H]
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                        # emit entering
+
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, h0, (states.transpose(1, 0, 2, 3, 4),
+                      chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)           # [B,nc,H,P,N]
+
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", cc.astype(jnp.float32),
+                       prev_states, jnp.exp(acs))
+    y = (y_diag + y_off).reshape(bsz, s, h, p)[:, :s_orig]
+    return y.astype(x.dtype), final_state
+
+
+def apply_mamba(cfg: ModelConfig, p: Dict, x: jax.Array, sh,
+                init_state=None, conv_init=None,
+                return_state: bool = False):
+    """Full mixer: in_proj -> conv -> SSD -> gated norm -> out_proj."""
+    bsz, s, _ = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    pdim = cfg.ssm_headdim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc_raw, dtr = _split_proj(cfg, zxbcdt)
+    z = sh(z, "batch", "seq", "d_inner")
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xbc = sh(xbc, "batch", "seq", "d_inner")
+    xs = xbc[..., :di].reshape(bsz, s, h, pdim)
+    b_ = xbc[..., di:di + n]
+    c_ = xbc[..., di + n:]
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])
+    y, final_state = _ssd_chunked(cfg, xs, dt, p["A_log"], b_, c_, init_state)
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xs
+    y = y.reshape(bsz, s, di)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    g = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    gf = g.astype(jnp.float32)
+    g = (gf * jax.lax.rsqrt(jnp.mean(gf * gf, -1, keepdims=True) + 1e-6)
+         * p["norm"]).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", g, p["out_proj"])
+    out = sh(out, "batch", "seq", "model_dim_act")
+    if return_state:
+        k = cfg.ssm_conv
+        conv_state = jnp.pad(  # last K-1 pre-conv inputs
+            xbc_raw[:, max(s - (k - 1), 0):, :],
+            ((0, 0), (max(k - 1 - s, 0), 0), (0, 0)))
+        return out, (final_state, conv_state)
+    return out, None
+
+
+def mamba_decode(cfg: ModelConfig, p: Dict, xt: jax.Array,
+                 ssm_state: jax.Array, conv_state: jax.Array, sh):
+    """One-token step. xt: [B,D]; ssm_state: [B,H,P,N];
+    conv_state: [B,K-1,conv_dim] (pre-activation conv inputs)."""
+    bsz = xt.shape[0]
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    pdim = cfg.ssm_headdim
+    zxbcdt = jnp.einsum("bd,de->be", xt, p["in_proj"])
+    z = zxbcdt[:, :di]
+    xbc_new = zxbcdt[:, di:2 * di + 2 * n]
+    dtr = zxbcdt[:, 2 * di + 2 * n:]
+    xfull = jnp.concatenate([conv_state, xbc_new[:, None, :]], axis=1)
+    conv = sum(xfull[:, j, :] * p["conv_w"][:, j].astype(xt.dtype)
+               for j in range(cfg.ssm_conv))
+    xbc = jax.nn.silu(conv + p["conv_b"].astype(xt.dtype))
+    xs = xbc[:, :di].reshape(bsz, h, pdim).astype(jnp.float32)
+    b_ = xbc[:, di:di + n].astype(jnp.float32)
+    c_ = xbc[:, di + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])   # [B,H]
+    fa = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * fa)                                       # [B,H]
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xs, b_)
+    new_state = ssm_state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", c_, new_state) \
+        + p["D"][None, :, None] * xs
+    y = y.reshape(bsz, di)
+    g = y * jax.nn.silu(z.astype(jnp.float32))
+    g = (g * jax.lax.rsqrt(jnp.mean(g * g, -1, keepdims=True) + 1e-6)
+         * p["norm"]).astype(xt.dtype)
+    out = jnp.einsum("bi,id->bd", g, p["out_proj"])
+    return out, new_state.astype(ssm_state.dtype), xfull[:, 1:, :]
+
+
+# ---------------------------------------------------------- full LM (ssm)
+def param_specs(cfg: ModelConfig) -> Dict:
+    return {
+        "embed": layers.embed_specs(cfg),
+        "blocks": {"ln": layers.norm_specs(cfg, (cfg.n_layers,)),
+                   "mamba": mamba_specs(cfg, (cfg.n_layers,))},
+        "final_norm": layers.norm_specs(cfg),
+    }
+
+
+def train_loss(cfg: ModelConfig, params: Dict, batch: Dict, sh,
+               remat: str = "dots_no_batch") -> jax.Array:
+    tokens = batch["tokens"]
+    x = layers.embed_tokens(params["embed"], tokens)
+    x = sh(x, "batch", "seq", "model_dim_act")
+
+    def body(carry, blk):
+        h, _ = apply_mamba(cfg, blk["mamba"],
+                           layers.apply_norm(cfg, blk["ln"], carry), sh)
+        return carry + h, None
+
+    if remat != "none":
+        body = jax.checkpoint(body, policy=REMAT_POLICIES[remat],
+                              prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = layers.apply_norm(cfg, params["final_norm"], x)
+    logits = layers.unembed(cfg, params["embed"], x, sh)
+    labels = jnp.concatenate([tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], 1)
+    mask = jnp.concatenate(
+        [jnp.ones_like(tokens[:, 1:], jnp.float32),
+         jnp.zeros_like(tokens[:, :1], jnp.float32)], 1)
+    return layers.softmax_xent(cfg, logits, labels, mask)
+
+
+def prefill(cfg: ModelConfig, params: Dict, tokens, sh):
+    """Returns (last-token logits, (ssm_states, conv_states)) stacked [L,...]."""
+    x = layers.embed_tokens(params["embed"], tokens)
+
+    def body(carry, blk):
+        h, st = apply_mamba(cfg, blk["mamba"],
+                            layers.apply_norm(cfg, blk["ln"], carry), sh,
+                            return_state=True)
+        return carry + h, st
+
+    x, states = jax.lax.scan(body, x, params["blocks"])
+    x = layers.apply_norm(cfg, params["final_norm"], x)
+    logits = layers.unembed(cfg, params["embed"], x[:, -1:], sh)
+    return logits, states
+
+
+def decode_step(cfg: ModelConfig, params: Dict, token, states, sh):
+    """token: [B,1]; states: (ssm [L,B,H,P,N], conv [L,B,K-1,conv_dim])."""
+    x = layers.embed_tokens(params["embed"], token)[:, 0, :]
+
+    def body(carry, xs):
+        blk, ss, cs = xs
+        xn = layers.apply_norm(cfg, blk["ln"], carry[:, None, :])[:, 0, :]
+        h, new_ss, new_cs = mamba_decode(cfg, blk["mamba"], xn, ss, cs, sh)
+        return carry + h, (new_ss, new_cs)
+
+    x, new_states = jax.lax.scan(body, x, (params["blocks"],) + tuple(states))
+    x = layers.apply_norm(cfg, params["final_norm"], x[:, None, :])
+    logits = layers.unembed(cfg, params["embed"], x, sh)
+    return logits, new_states
+
+
+def state_specs(cfg: ModelConfig, batch: int):
+    di, n = cfg.d_inner, cfg.ssm_state
+    return (
+        PSpec((cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_headdim, n),
+              (None, "batch", None, None, None), jnp.float32, "zeros"),
+        PSpec((cfg.n_layers, batch, cfg.ssm_conv - 1, di + 2 * n),
+              (None, "batch", None, "d_inner"), cfg.dtype, "zeros"),
+    )

@@ -1,0 +1,157 @@
+"""Parameter specs: one declaration drives init, dry-run ShapeDtypeStructs,
+and mesh shardings (logical-axis -> PartitionSpec rules)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    """Shape + dtype + logical axis names for one parameter leaf."""
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical name per dim (None = replicated)
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"              # normal | zeros | ones
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x):
+    return isinstance(x, PSpec)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Logical axis -> mesh axis mapping. The hillclimb loop edits THIS."""
+    batch: Tuple[str, ...] = ("data",)       # data-parallel axes
+    model: str = "model"                     # tensor-parallel axis
+    fsdp: Optional[str] = None               # axis for ZeRO-3 param sharding
+    seq: Optional[str] = None                # sequence parallelism (acts)
+    kv_seq: Optional[str] = None             # decode KV-cache sequence axis
+    expert: Optional[str] = "model"          # expert parallelism
+    tp_enabled: bool = True                  # False: replicate weights, use
+                                             # the model axis for seq/attn_q
+    vocab_mode: str = "tp"                   # "tp" | "replicated"
+    moe_gather: str = "bf16"                 # "bf16" | "int8": wire format of
+                                             # the FSDP expert-weight gather
+
+    def of(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        tp = self.model if self.tp_enabled else None
+        vocab_m = self.model if self.vocab_mode == "tp" else None
+        seq_in = None if self.tp_enabled else self.seq
+        table = {
+            "batch": self.batch,
+            "vocab": vocab_m,
+            "heads": tp,           # flattened n_heads*head_dim dim
+            "kv_heads": tp,
+            "ff": tp,
+            "d_inner": tp,
+            "experts": self.expert,
+            "attn_q": self.model,   # context-parallel blocked attention
+            "embed": self.fsdp,    # d_model dim of weights (ZeRO-3 slot)
+            "seq": self.seq,
+            # inside TP regions (projections/logits) the model axis is busy
+            # with heads/ff/vocab: Megatron-SP gathers seq there. Without TP
+            # the model axis is free for seq everywhere.
+            "seq_inner": seq_in,
+            # unembed: vocab sharding wins the model axis over seq sharding
+            "seq_unembed": None if vocab_m else seq_in,
+            "kv_seq": self.kv_seq,
+            "model_dim_act": None,  # activations' d_model dim
+        }
+        return table.get(logical, None)
+
+    def pspec(self, axes: Tuple[Optional[str], ...]) -> P:
+        return P(*[self.of(a) for a in axes])
+
+    def pspec_for_shape(self, shape, axes, mesh) -> P:
+        """Divisibility- and uniqueness-aware spec: drop mesh axes that do
+        not divide the dim (batch=1 long-context cells) or that an earlier
+        dim already claimed (e.g. vocab=model + 2D fsdp=(data, model))."""
+        out = []
+        used = set()
+        for dim, logical in zip(shape, axes):
+            m = self.of(logical)
+            if m is None:
+                out.append(None)
+                continue
+            names = [n for n in ((m,) if isinstance(m, str) else tuple(m))
+                     if n not in used]
+            prod = 1
+            for nm in names:
+                prod *= mesh.shape[nm]
+            if not names or dim % prod != 0:
+                out.append(None)
+                continue
+            used.update(names)
+            out.append(names[0] if len(names) == 1 else tuple(names))
+        return P(*out)
+
+
+def init_params(specs, key, scale: float = 0.02):
+    """Materialize real parameters from a spec tree."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, s in zip(keys, leaves):
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, s.dtype))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, s.dtype))
+        else:
+            fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+            std = min(scale, (1.0 / max(fan_in, 1)) ** 0.5)
+            out.append((jax.random.normal(k, s.shape, jnp.float32) * std
+                        ).astype(s.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def sds_tree(specs):
+    """ShapeDtypeStruct stand-ins (dry-run: no allocation)."""
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                        specs, is_leaf=_is_spec)
+
+
+def sharding_tree(specs, rules: ShardingRules, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, rules.pspec_for_shape(s.shape, s.axes,
+                                                            mesh)),
+        specs, is_leaf=_is_spec)
+
+
+def pspec_tree(specs, rules: ShardingRules):
+    return jax.tree.map(lambda s: rules.pspec(s.axes), specs, is_leaf=_is_spec)
+
+
+def param_count(specs) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(specs, is_leaf=_is_spec))
+
+
+def make_sharder(rules: Optional[ShardingRules], mesh=None):
+    """Activation-sharding hook threaded through the model code.
+
+    sh(x, 'batch', None, 'heads') applies with_sharding_constraint when rules
+    are present (distributed lowering) and is identity on CPU tests.
+    """
+    if rules is None:
+        return lambda x, *axes: x
+
+    def sh(x, *axes):
+        if mesh is not None:
+            spec = rules.pspec_for_shape(x.shape, axes, mesh)
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+        return jax.lax.with_sharding_constraint(x, rules.pspec(axes))
+
+    sh.rules = rules   # shard_map-based layers (MoE EP) read these
+    sh.mesh = mesh
+    return sh

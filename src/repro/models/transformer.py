@@ -1,0 +1,143 @@
+"""Decoder-only transformer LM (dense GQA + MoE variants).
+
+Layers are parameter-stacked and driven by ``lax.scan`` (fast compiles at
+60+ layers, remat-friendly). Exposes the three step kinds the shape grid
+needs: train loss, prefill (builds KV cache), and single-token decode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, moe
+from .config import ModelConfig
+from .spec import PSpec
+
+REMAT_POLICIES = {
+    "none": None,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+    "nothing": jax.checkpoint_policies.nothing_saveable,
+}
+
+
+def block_specs(cfg: ModelConfig, L: Tuple[int, ...]) -> Dict:
+    sp = {
+        "ln1": layers.norm_specs(cfg, L),
+        "ln2": layers.norm_specs(cfg, L),
+        "attn": layers.attn_specs(cfg, L),
+    }
+    if cfg.family == "moe":
+        sp["moe"] = moe.moe_specs(cfg, L)
+    else:
+        sp["mlp"] = layers.mlp_specs(cfg, L)
+    return sp
+
+
+def param_specs(cfg: ModelConfig) -> Dict:
+    return {
+        "embed": layers.embed_specs(cfg),
+        "blocks": block_specs(cfg, (cfg.n_layers,)),
+        "final_norm": layers.norm_specs(cfg),
+    }
+
+
+def apply_block(cfg: ModelConfig, p: Dict, x, positions, sh, *,
+                cache=None, cache_pos=None):
+    h, new_kv = layers.attention(
+        cfg, p["attn"], layers.apply_norm(cfg, p["ln1"], x), positions, sh,
+        causal=True, cache=cache, cache_pos=cache_pos)
+    x = x + h
+    hn = layers.apply_norm(cfg, p["ln2"], x)
+    if cfg.family == "moe":
+        h, aux = moe.apply_moe(cfg, p["moe"], hn, sh)
+    else:
+        h, aux = layers.apply_mlp(cfg, p["mlp"], hn, sh), jnp.zeros((), jnp.float32)
+    return x + h, new_kv, aux
+
+
+def apply_stack(cfg: ModelConfig, blocks: Dict, x, positions, sh,
+                remat: str = "dots_no_batch"):
+    """Train/prefill-without-cache path: scan blocks, return (x, aux_sum)."""
+
+    def body(carry, blk):
+        y, _, aux = apply_block(cfg, blk, carry, positions, sh)
+        return y, aux
+
+    policy = REMAT_POLICIES[remat]
+    if remat != "none":
+        body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+    x, auxs = jax.lax.scan(body, x, blocks)
+    return x, jnp.sum(auxs)
+
+
+# ------------------------------------------------------------------- train
+def train_loss(cfg: ModelConfig, params: Dict, batch: Dict, sh,
+               remat: str = "dots_no_batch") -> jax.Array:
+    tokens = batch["tokens"]                     # [B, S]
+    x = layers.embed_tokens(params["embed"], tokens)
+    x = sh(x, "batch", "seq", "model_dim_act")
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    x, aux = apply_stack(cfg, params["blocks"], x, positions, sh, remat)
+    x = layers.apply_norm(cfg, params["final_norm"], x)
+    logits = layers.unembed(cfg, params["embed"], x, sh)
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+    mask = jnp.concatenate(
+        [jnp.ones_like(tokens[:, 1:], jnp.float32),
+         jnp.zeros_like(tokens[:, :1], jnp.float32)], axis=1)
+    loss = layers.softmax_xent(cfg, logits, labels, mask)
+    return loss + 0.01 * aux
+
+
+# ----------------------------------------------------------------- serving
+def prefill(cfg: ModelConfig, params: Dict, tokens, sh, max_len: Optional[int] = None):
+    """Forward pass that also emits the stacked KV cache [L, B, Smax, KV, hd].
+
+    ``max_len`` pads the cache beyond the prompt for subsequent decode.
+    """
+    b, s = tokens.shape
+    smax = max_len or s
+    x = layers.embed_tokens(params["embed"], tokens)
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def body(carry, blk):
+        ck = jnp.zeros((b, smax, cfg.n_kv_heads, cfg.hd), cfg.dtype)
+        cv = jnp.zeros((b, smax, cfg.n_kv_heads, cfg.hd), cfg.dtype)
+        y, kv, _ = apply_block(cfg, blk, carry, positions, sh,
+                               cache=(ck, cv), cache_pos=0)
+        return y, kv
+
+    x, caches = jax.lax.scan(body, x, params["blocks"])
+    x = layers.apply_norm(cfg, params["final_norm"], x)
+    logits = layers.unembed(cfg, params["embed"], x[:, -1:], sh)
+    return logits, caches
+
+
+def decode_step(cfg: ModelConfig, params: Dict, token, cache, pos, sh):
+    """One decode step. token: [B, 1]; cache: (k, v) stacked [L, B, S, KV, hd];
+    pos: scalar int32 position of the new token."""
+    x = layers.embed_tokens(params["embed"], token)
+    positions = pos + jnp.zeros((1,), jnp.int32)
+
+    def body(carry, xs):
+        blk, ck, cv = xs
+        y, kv, _ = apply_block(cfg, blk, carry, positions, sh,
+                               cache=(ck, cv), cache_pos=pos)
+        return y, kv
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"],) + tuple(cache))
+    x = layers.apply_norm(cfg, params["final_norm"], x)
+    logits = layers.unembed(cfg, params["embed"], x, sh)
+    return logits, new_cache
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    """PSpec tree for the decode KV cache (dry-run + serving alloc)."""
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    axes = (None, "batch", "kv_seq", None, None)
+    return (PSpec(shape, axes, cfg.dtype, "zeros"),
+            PSpec(shape, axes, cfg.dtype, "zeros"))

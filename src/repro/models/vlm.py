@@ -1,0 +1,66 @@
+"""VLM (internvl2): vision frontend STUB + GQA LM backbone.
+
+Per the assignment, the InternViT frontend is a stub — ``input_specs()``
+provides precomputed patch embeddings [B, n_img, d_model], consumed as a
+prefix ahead of the text embeddings. Loss covers text positions only.
+Serving reuses the transformer decode path (the image prefix only exists at
+prefill time)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, transformer
+from .config import ModelConfig
+
+param_specs = transformer.param_specs
+decode_step = transformer.decode_step
+cache_specs = transformer.cache_specs
+
+
+def train_loss(cfg: ModelConfig, params: Dict, batch: Dict, sh,
+               remat: str = "dots_no_batch") -> jax.Array:
+    img = batch["img_embeds"]                          # [B, n_img, D]
+    tokens = batch["tokens"]                           # [B, S_text]
+    n_img = img.shape[1]
+    x = jnp.concatenate(
+        [img.astype(cfg.dtype), layers.embed_tokens(params["embed"], tokens)],
+        axis=1)
+    x = sh(x, "batch", "seq", "model_dim_act")
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x, aux = transformer.apply_stack(cfg, params["blocks"], x, positions, sh,
+                                     remat)
+    x = layers.apply_norm(cfg, params["final_norm"], x)
+    logits = layers.unembed(cfg, params["embed"], x[:, n_img:], sh)
+    labels = jnp.concatenate([tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], 1)
+    mask = jnp.concatenate(
+        [jnp.ones_like(tokens[:, 1:], jnp.float32),
+         jnp.zeros_like(tokens[:, :1], jnp.float32)], 1)
+    return layers.softmax_xent(cfg, logits, labels, mask) + 0.01 * aux
+
+
+def prefill(cfg: ModelConfig, params: Dict, img_embeds, tokens, sh,
+            max_len=None):
+    """Image prefix + prompt prefill; cache covers the combined sequence."""
+    b = tokens.shape[0]
+    n_img = img_embeds.shape[1]
+    s = n_img + tokens.shape[1]
+    smax = max_len or s
+    x = jnp.concatenate(
+        [img_embeds.astype(cfg.dtype),
+         layers.embed_tokens(params["embed"], tokens)], axis=1)
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def body(carry, blk):
+        ck = jnp.zeros((b, smax, cfg.n_kv_heads, cfg.hd), cfg.dtype)
+        cv = jnp.zeros((b, smax, cfg.n_kv_heads, cfg.hd), cfg.dtype)
+        y, kv, _ = transformer.apply_block(cfg, blk, carry, positions, sh,
+                                           cache=(ck, cv), cache_pos=0)
+        return y, kv
+
+    x, caches = jax.lax.scan(body, x, params["blocks"])
+    x = layers.apply_norm(cfg, params["final_norm"], x)
+    logits = layers.unembed(cfg, params["embed"], x[:, -1:], sh)
+    return logits, caches

@@ -1,0 +1,3 @@
+from .engine import Engine, Request
+
+__all__ = ["Engine", "Request"]

@@ -1,0 +1,87 @@
+"""Batched serving engine: continuous prefill + decode over a request queue.
+
+Small-model CPU serving for examples/serve_lm.py and the serve smoke tests;
+the same step functions lower onto the production mesh via launch/dryrun
+(decode_32k / long_500k cells)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.api import Model
+from ..models import transformer
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray              # int32 [S]
+    max_new: int = 16
+    out: Optional[np.ndarray] = None
+
+
+class Engine:
+    """Fixed-batch engine: pads requests to slots, prefills per batch, then
+    decodes until every slot finishes (greedy)."""
+
+    def __init__(self, model: Model, params, batch_slots: int = 4,
+                 max_len: int = 256):
+        assert model.cfg.family in ("dense", "moe"), \
+            "engine demo targets decoder-only LMs"
+        self.model = model
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        sh = lambda x, *a: x  # noqa: E731 — single-device serving
+        cfg = model.cfg
+
+        def _prefill(params, tokens):
+            return transformer.prefill(cfg, params, tokens, sh,
+                                       max_len=max_len)
+
+        def _decode(params, token, cache, pos):
+            return transformer.decode_step(cfg, params, token, cache, pos, sh)
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode)
+
+    def run(self, requests: List[Request]) -> dict:
+        stats = {"tokens_out": 0, "wall_s": 0.0, "batches": 0}
+        t0 = time.time()
+        for i in range(0, len(requests), self.slots):
+            batch = requests[i:i + self.slots]
+            self._run_batch(batch, stats)
+            stats["batches"] += 1
+        stats["wall_s"] = time.time() - t0
+        stats["tok_per_s"] = stats["tokens_out"] / max(stats["wall_s"], 1e-9)
+        return stats
+
+    def _run_batch(self, batch: List[Request], stats: dict) -> None:
+        b = len(batch)
+        plen = max(len(r.prompt) for r in batch)
+        toks = np.zeros((self.slots, plen), np.int32)
+        for j, r in enumerate(batch):
+            toks[j, plen - len(r.prompt):] = r.prompt  # left-pad
+        logits, cache = self._prefill(self.params, jnp.asarray(toks))
+        new = np.asarray(jnp.argmax(logits[:, -1, :], -1), np.int32)
+        outs = [[int(new[j])] for j in range(b)]
+        max_new = max(r.max_new for r in batch)
+        pos = plen
+        for _ in range(max_new - 1):
+            if pos >= self.max_len:
+                break
+            logits, cache = self._decode(
+                self.params, jnp.asarray(new[:, None]), cache,
+                jnp.asarray(pos, jnp.int32))
+            new = np.asarray(jnp.argmax(logits[:, -1, :], -1), np.int32)
+            for j in range(b):
+                if len(outs[j]) < batch[j].max_new:
+                    outs[j].append(int(new[j]))
+            pos += 1
+        for j, r in enumerate(batch):
+            r.out = np.asarray(outs[j], np.int32)
+            stats["tokens_out"] += len(r.out)

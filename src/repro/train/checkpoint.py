@@ -1,0 +1,107 @@
+"""Checkpoint/restart (fault tolerance, DESIGN §9).
+
+Layout on disk:
+  <dir>/step_000123/
+     manifest.json        tree structure, shapes, dtypes, step, mesh note
+     leaf_00000.npy ...   one file per pytree leaf
+  <dir>/LATEST            atomic pointer (written via rename)
+
+Arrays are saved as *global* host arrays, so a restore may re-shard onto any
+mesh whose axes divide the shapes — that is the elastic-restart path
+(train/elastic.py): shrink or grow the DP width at a checkpoint boundary.
+Save is atomic (tmp dir + rename); keep_last_k prunes old steps. A restart
+after a simulated node failure is covered by tests/test_fault.py.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree) -> Tuple[Any, list]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return treedef, leaves
+
+
+def save(ckpt_dir: str, step: int, tree, *, keep_last_k: int = 3,
+         extra: Optional[dict] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    treedef, leaves = _leaf_paths(tree)
+    dtypes = []
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        dtypes.append(str(arr.dtype))
+        if str(arr.dtype) == "bfloat16":  # np.save cannot round-trip bf16
+            arr = arr.view(np.uint16)
+        elif arr.dtype.kind == "V":
+            raise TypeError(f"unsupported leaf dtype {arr.dtype}")
+        np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), arr)
+    manifest = {"step": step, "treedef": str(treedef),
+                "n_leaves": len(leaves), "dtypes": dtypes,
+                "extra": extra or {}}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)                      # atomic publish
+    latest_tmp = os.path.join(ckpt_dir, "LATEST.tmp")
+    with open(latest_tmp, "w") as f:
+        f.write(os.path.basename(final))
+    os.replace(latest_tmp, os.path.join(ckpt_dir, "LATEST"))
+    _prune(ckpt_dir, keep_last_k)
+    return final
+
+
+def _prune(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    try:
+        with open(os.path.join(ckpt_dir, "LATEST")) as f:
+            return int(f.read().strip().split("_")[1])
+    except (FileNotFoundError, IndexError, ValueError):
+        return None
+
+
+def restore(ckpt_dir: str, tree_like, step: Optional[int] = None,
+            shardings=None):
+    """Restore into the structure of ``tree_like``. ``shardings`` (optional
+    pytree of NamedSharding) re-shards onto the *current* mesh — elastic."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    treedef, leaves_like = _leaf_paths(tree_like)
+    assert manifest["n_leaves"] == len(leaves_like), \
+        f"leaf count mismatch: ckpt {manifest['n_leaves']} vs {len(leaves_like)}"
+    import ml_dtypes
+    leaves = []
+    for i in range(len(leaves_like)):
+        arr = np.load(os.path.join(d, f"leaf_{i:05d}.npy"))
+        if manifest.get("dtypes", [None] * (i + 1))[i] == "bfloat16":
+            arr = arr.view(ml_dtypes.bfloat16)
+        leaves.append(arr)
+    tree = jax.tree.unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    else:
+        import jax.numpy as jnp
+        tree = jax.tree.map(jnp.asarray, tree)
+    return tree, manifest

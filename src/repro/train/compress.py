@@ -1,0 +1,103 @@
+"""Gradient compression for cross-pod reduces (DESIGN §9).
+
+Two schemes, both with error feedback so compression error accumulates into
+the next step instead of being lost:
+
+  * top-k sparsification — keep the k largest-|g| entries per tensor.
+  * int8 quantization   — per-block scale (the wire format for the slow
+    pod-interconnect hop; 4x traffic cut on the 2·S·(n-1)/n term).
+
+On real multi-pod deployments the compressed payload is what crosses the
+pod axis (a shard_map psum over 'pod' of the int8 tensors + scales);
+correctness (roundtrip + convergence under error feedback) is covered by
+tests/test_fault.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressConfig:
+    scheme: str = "int8"          # "int8" | "topk" | "none"
+    topk_frac: float = 0.01
+    block: int = 256
+
+
+# ----------------------------------------------------------------- top-k
+def topk_compress(g: jax.Array, frac: float):
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(int(flat.shape[0] * frac), 1)
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    sel = flat[idx]
+    return (idx.astype(jnp.int32), sel), g.shape, flat.shape[0]
+
+
+def topk_decompress(payload, shape, n: int) -> jax.Array:
+    idx, vals = payload
+    return jnp.zeros((n,), jnp.float32).at[idx].set(vals).reshape(shape)
+
+
+# ------------------------------------------------------------------ int8
+def int8_compress(g: jax.Array, block: int = 256):
+    flat = g.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % block
+    b = jnp.pad(flat, (0, pad)).reshape(-1, block)
+    scale = jnp.max(jnp.abs(b), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(b / scale), -127, 127).astype(jnp.int8)
+    return (q, scale.astype(jnp.float32)), g.shape, n
+
+
+def int8_decompress(payload, shape, n: int) -> jax.Array:
+    q, scale = payload
+    return (q.astype(jnp.float32) * scale).reshape(-1)[:n].reshape(shape)
+
+
+# -------------------------------------------------------- error feedback
+def compress_with_feedback(grads, residual, cfg: CompressConfig):
+    """(compressed-then-decompressed grads, new residual).
+
+    The returned grads are what the wire delivers; residual carries the
+    quantization/sparsification error into the next step (EF-SGD)."""
+    if cfg.scheme == "none":
+        return grads, residual
+
+    def one(g, r):
+        c = g.astype(jnp.float32) + r
+        if cfg.scheme == "topk":
+            payload, shape, n = topk_compress(c, cfg.topk_frac)
+            d = topk_decompress(payload, shape, n)
+        else:
+            payload, shape, n = int8_compress(c, cfg.block)
+            d = int8_decompress(payload, shape, n)
+        return d.astype(g.dtype), c - d
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))
+
+
+def zero_residual(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def wire_bytes(grads, cfg: CompressConfig) -> Tuple[int, int]:
+    """(uncompressed fp32 bytes, compressed wire bytes) — for EXPERIMENTS."""
+    import numpy as np
+    raw = sum(int(np.prod(g.shape)) * 4 for g in jax.tree.leaves(grads))
+    if cfg.scheme == "int8":
+        comp = sum(int(np.prod(g.shape)) * (1 + 4 / cfg.block)
+                   for g in jax.tree.leaves(grads))
+    elif cfg.scheme == "topk":
+        comp = sum(int(int(np.prod(g.shape)) * cfg.topk_frac) * 8
+                   for g in jax.tree.leaves(grads))
+    else:
+        comp = raw
+    return raw, int(comp)

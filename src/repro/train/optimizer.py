@@ -1,0 +1,129 @@
+"""AdamW with optional int8-quantized moments (distributed-optimization
+trick: at kimi-k2 scale, fp32 m/v do not fit a v5e pod — int8 + per-row f32
+scales cut optimizer HBM ~4x and checkpoint traffic likewise).
+
+Quantized moments keep the parameter's exact shape and logical axes, so the
+mesh sharding of the optimizer state follows the parameter sharding (ZeRO
+slotting works unchanged). 1-D leaves (norm scales, biases) stay fp32 —
+they are O(d) and quantization there buys nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    quantized_state: bool = False    # int8 m/v with per-row f32 scales
+
+
+def lr_at(cfg: AdamWConfig, step) -> jax.Array:
+    """Linear warmup -> cosine decay to 10% of peak."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.peak_lr * warm * cos
+
+
+def _quantizable(shape) -> bool:
+    return len(shape) >= 2
+
+
+def _q8_encode(x: jax.Array):
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": scale.astype(jnp.float32)}
+
+
+def _q8_decode(m) -> jax.Array:
+    return m["q"].astype(jnp.float32) * m["s"]
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    def zero_like(p):
+        if cfg.quantized_state and _quantizable(p.shape):
+            return {"q": jnp.zeros(p.shape, jnp.int8),
+                    "s": jnp.full(p.shape[:-1] + (1,), 1e-12, jnp.float32)}
+        return jnp.zeros(p.shape, jnp.float32)
+
+    return {
+        "m": jax.tree.map(zero_like, params),
+        "v": jax.tree.map(zero_like, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig):
+    """Returns (new_params, new_state). Gradients may be bf16; math in f32."""
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+    lr = lr_at(cfg, count)
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    def upd(g, m, v, p):
+        quant = cfg.quantized_state and _quantizable(p.shape)
+        g = g.astype(jnp.float32) * clip
+        mf = _q8_decode(m) if quant else m
+        vf = _q8_decode(v) if quant else v
+        mf = cfg.b1 * mf + (1 - cfg.b1) * g
+        vf = cfg.b2 * vf + (1 - cfg.b2) * g * g
+        mh = mf / (1 - cfg.b1 ** cf)
+        vh = vf / (1 - cfg.b2 ** cf)
+        step_ = mh / (jnp.sqrt(vh) + cfg.eps)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0  # none on norms/bias
+        new_p = (p.astype(jnp.float32)
+                 - lr * (step_ + decay * p.astype(jnp.float32))).astype(p.dtype)
+        if quant:
+            return new_p, _q8_encode(mf), _q8_encode(vf)
+        return new_p, mf, vf
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(g, m, v, p)
+           for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "count": count}
+
+
+def opt_state_specs(param_specs, cfg: AdamWConfig):
+    """PSpec tree for the optimizer state (drives dry-run shardings).
+    Moments inherit the parameter's logical axes -> identical sharding."""
+    from ..models.spec import PSpec
+
+    def mom(s: PSpec):
+        if cfg.quantized_state and _quantizable(s.shape):
+            return {"q": PSpec(s.shape, s.axes, jnp.int8, "zeros"),
+                    "s": PSpec(s.shape[:-1] + (1,), s.axes[:-1] + (None,),
+                               jnp.float32, "zeros")}
+        return PSpec(s.shape, s.axes, jnp.float32, "zeros")
+
+    is_spec = lambda x: isinstance(x, PSpec)  # noqa: E731
+    return {
+        "m": jax.tree.map(mom, param_specs, is_leaf=is_spec),
+        "v": jax.tree.map(mom, param_specs, is_leaf=is_spec),
+        "count": PSpec((), (), jnp.int32, "zeros"),
+    }

@@ -1,0 +1,51 @@
+"""Train-step factory: loss -> grads (optionally microbatched) -> AdamW."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.api import Model
+from ..models.spec import ShardingRules, make_sharder
+from .optimizer import AdamWConfig, adamw_update
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    rules: Optional[ShardingRules] = None, mesh=None,
+                    remat: str = "dots_no_batch", microbatches: int = 1):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, loss).
+
+    ``microbatches > 1`` scans over batch slices accumulating f32 grads
+    (gradient accumulation — the standard way to overlap the per-microbatch
+    reduce with compute and to fit large global batches)."""
+    sh = make_sharder(rules, mesh)
+
+    def loss_fn(params, batch):
+        return model.train_loss(params, batch, sh, remat)
+
+    def step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def body(acc, mbatch):
+                l, g = jax.value_and_grad(loss_fn)(params, mbatch)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32) / microbatches,
+                    acc, g)
+                return acc, l
+
+            acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            grads, losses = jax.lax.scan(body, acc0, mb)
+            loss = jnp.mean(losses)
+        new_params, new_opt = adamw_update(grads, opt_state, params, opt_cfg)
+        return new_params, new_opt, loss
+
+    return step

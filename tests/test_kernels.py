@@ -1,0 +1,115 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.common import I32_MAX
+from repro.kernels.merge_rank import merge_sorted, merge_sorted_ref
+from repro.kernels.segment_reduce import segment_sum, segment_sum_ref
+from repro.kernels.sorted_search import sorted_search, sorted_search_ref
+from repro.kernels.spmv import ell_from_coo, spmv_ell, spmv_ell_ref
+
+rng = np.random.default_rng(7)
+
+
+# ---------------------------------------------------------------- sorted_search
+@pytest.mark.parametrize("n_tab", [1, 5, 300, 2048, 5000])
+@pytest.mark.parametrize("n_q", [1, 7, 257])
+@pytest.mark.parametrize("side", ["left", "right"])
+def test_sorted_search_matches_ref(n_tab, n_q, side):
+    tab = np.sort(rng.integers(0, 500, n_tab)).astype(np.int32)
+    q = rng.integers(-5, 510, n_q).astype(np.int32)
+    got = sorted_search(jnp.asarray(tab), jnp.asarray(q), side=side,
+                        block_q=64, block_t=256)
+    want = sorted_search_ref(jnp.asarray(tab), n_tab, jnp.asarray(q), side=side)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sorted_search_padded_table():
+    """Valid-prefix semantics: pads (I32_MAX) beyond n never count."""
+    tab = np.full(100, I32_MAX, dtype=np.int32)
+    tab[:10] = np.arange(10) * 3
+    q = np.asarray([0, 1, 29, 100], dtype=np.int32)
+    got = sorted_search(jnp.asarray(tab), jnp.asarray(q), block_q=64, block_t=64)
+    want = sorted_search_ref(jnp.asarray(tab), 10, jnp.asarray(q))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------------------------------ merge_rank
+def _rand_run(n, n_valid, seed):
+    r = np.random.default_rng(seed)
+    rows = np.sort(r.integers(0, 40, n_valid)).astype(np.int32)
+    cols = r.integers(0, 40, n_valid).astype(np.int32)
+    order = np.lexsort((cols, rows))
+    rows, cols = rows[order], cols[order]
+    vals = r.normal(size=n_valid).astype(np.float32)
+    pr = np.full(n, I32_MAX, np.int32); pr[:n_valid] = rows
+    pc = np.full(n, I32_MAX, np.int32); pc[:n_valid] = cols
+    pv = np.zeros(n, np.float32); pv[:n_valid] = vals
+    return pr, pc, pv
+
+
+@pytest.mark.parametrize("na,va,nb,vb", [
+    (8, 8, 8, 8), (64, 50, 32, 17), (300, 123, 300, 300), (512, 0, 64, 33),
+])
+def test_merge_matches_ref(na, va, nb, vb):
+    ar, ac, av = _rand_run(na, va, 1)
+    br, bc, bv = _rand_run(nb, vb, 2)
+    gr, gc, gv = merge_sorted(*(jnp.asarray(x) for x in (ar, ac, av, br, bc, bv)),
+                              block_q=64, block_t=64)
+    wr, wc, wv = merge_sorted_ref(*(jnp.asarray(x) for x in (ar, ac, av, br, bc, bv)))
+    n = va + vb  # valid prefix of merged output
+    np.testing.assert_array_equal(np.asarray(gr)[:n], np.asarray(wr)[:n])
+    np.testing.assert_array_equal(np.asarray(gc)[:n], np.asarray(wc)[:n])
+    np.testing.assert_allclose(np.asarray(gv)[:n], np.asarray(wv)[:n])
+    assert np.all(np.asarray(gr)[n:] == I32_MAX)
+
+
+def test_merge_tie_order_b_after_a():
+    """Equal keys: A-side (old) entries precede B-side (new) -> last-wins dedup."""
+    a = (jnp.asarray([3], jnp.int32), jnp.asarray([4], jnp.int32),
+         jnp.asarray([1.0], jnp.float32))
+    b = (jnp.asarray([3], jnp.int32), jnp.asarray([4], jnp.int32),
+         jnp.asarray([2.0], jnp.float32))
+    _, _, v = merge_sorted(*a, *b, block_q=64, block_t=64)
+    np.testing.assert_allclose(np.asarray(v)[:2], [1.0, 2.0])
+
+
+# -------------------------------------------------------------- segment_reduce
+@pytest.mark.parametrize("n", [1, 100, 1025, 4096])
+@pytest.mark.parametrize("n_seg", [1, 17, 512, 1000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+def test_segment_sum_matches_ref(n, n_seg, dtype):
+    ids = rng.integers(-1, n_seg, n).astype(np.int32)  # includes dropped -1s
+    vals = rng.integers(0, 7, n).astype(np.asarray(jnp.zeros(0, dtype)).dtype)
+    got = segment_sum(jnp.asarray(ids), jnp.asarray(vals), n_segments=n_seg,
+                      block_n=128, block_s=64)
+    want = segment_sum_ref(jnp.asarray(ids), jnp.asarray(vals), n_seg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+# ------------------------------------------------------------------------ spmv
+@pytest.mark.parametrize("n_rows,n_cols,nnz", [
+    (1, 1, 1), (10, 10, 30), (100, 257, 900), (300, 2100, 5000),
+])
+def test_spmv_matches_ref(n_rows, n_cols, nnz):
+    r = np.sort(rng.integers(0, n_rows, nnz))
+    c = rng.integers(0, n_cols, nnz)
+    v = rng.normal(size=nnz).astype(np.float32)
+    cols, vals = ell_from_coo(r, c, v, n_rows)
+    x = rng.normal(size=n_cols).astype(np.float32)
+    got = spmv_ell(jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(x),
+                   block_r=64, block_c=128)
+    want = spmv_ell_ref(jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_spmv_duplicate_cols_accumulate():
+    cols = jnp.asarray([[0, 0, -1]], jnp.int32)
+    vals = jnp.asarray([[2.0, 3.0, 99.0]], jnp.float32)
+    x = jnp.asarray([10.0], jnp.float32)
+    got = spmv_ell(cols, vals, x, block_r=64, block_c=128)
+    np.testing.assert_allclose(np.asarray(got), [50.0])

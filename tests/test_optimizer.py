@@ -1,0 +1,68 @@
+"""Optimizer: AdamW trajectory sanity, quantized-state fidelity, schedule."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                   lr_at, opt_state_specs)
+
+
+def quad_loss(p):
+    return jnp.sum((p["w"] - 3.0) ** 2) + jnp.sum((p["b"] - 1.0) ** 2)
+
+
+def run_steps(cfg, steps=300):
+    params = {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))}
+    state = adamw_init(params, cfg)
+    for _ in range(steps):
+        grads = jax.grad(quad_loss)(params)
+        params, state = adamw_update(grads, state, params, cfg)
+    return params
+
+
+def test_adamw_converges():
+    cfg = AdamWConfig(peak_lr=0.05, warmup_steps=10, total_steps=300,
+                      weight_decay=0.0)
+    p = run_steps(cfg)
+    np.testing.assert_allclose(np.asarray(p["w"]), 3.0, atol=0.05)
+    np.testing.assert_allclose(np.asarray(p["b"]), 1.0, atol=0.05)
+
+
+def test_quantized_states_track_fp32():
+    cfg32 = AdamWConfig(peak_lr=0.05, warmup_steps=10, total_steps=300,
+                        weight_decay=0.0)
+    cfg8 = AdamWConfig(peak_lr=0.05, warmup_steps=10, total_steps=300,
+                       weight_decay=0.0, quantized_state=True)
+    p32, p8 = run_steps(cfg32), run_steps(cfg8)
+    np.testing.assert_allclose(np.asarray(p8["w"]), np.asarray(p32["w"]),
+                               atol=0.1)
+
+
+def test_quantized_state_memory_layout():
+    from repro.models.spec import PSpec
+    specs = {"w": PSpec((128, 256), ("embed", "ff"), jnp.bfloat16)}
+    os8 = opt_state_specs(specs, AdamWConfig(quantized_state=True))
+    assert os8["m"]["w"]["q"].dtype == jnp.int8
+    assert os8["m"]["w"]["q"].shape == (128, 256)
+    assert os8["m"]["w"]["q"].axes == ("embed", "ff")  # sharding preserved
+    assert os8["m"]["w"]["s"].shape == (128, 1)
+
+
+def test_grad_clip_applies():
+    cfg = AdamWConfig(peak_lr=0.1, grad_clip=1e-6, warmup_steps=0,
+                      total_steps=10, weight_decay=0.0)
+    params = {"w": jnp.ones((4,))}
+    state = adamw_init(params, cfg)
+    grads = {"w": jnp.full((4,), 1e6)}
+    new_p, _ = adamw_update(grads, state, params, cfg)
+    # clipped grads -> tiny update magnitude despite huge raw grads
+    assert float(jnp.max(jnp.abs(new_p["w"] - params["w"]))) < 0.2
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(peak_lr=1.0, warmup_steps=100, total_steps=1000)
+    assert float(lr_at(cfg, jnp.asarray(0))) == 0.0
+    assert float(lr_at(cfg, jnp.asarray(100))) == pytest.approx(1.0)
+    assert float(lr_at(cfg, jnp.asarray(1000))) == pytest.approx(0.1, abs=0.01)
+    assert float(lr_at(cfg, jnp.asarray(550))) < 1.0
