@@ -4,11 +4,16 @@ Prints ``name,us_per_call,derived`` CSV rows (derived = edges/s or the
 figure-specific rate). Reduced sizes keep the whole suite CPU-friendly;
 pass --full for the paper-scale grid.
 
-  PYTHONPATH=src python -m benchmarks.run [--full]
+  PYTHONPATH=src python -m benchmarks.run [--full] [--json out.json]
+
+``--json`` additionally writes the rows as structured records (name, rate,
+engine, shard count, entries/sec where applicable) so successive PRs can
+diff performance trajectories mechanically.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
@@ -16,8 +21,11 @@ import numpy as np
 ROWS = []
 
 
-def emit(name: str, us_per_call: float, derived: str) -> None:
-    ROWS.append((name, us_per_call, derived))
+def emit(name: str, us_per_call: float, derived: str, **meta) -> None:
+    """Record one benchmark row; ``meta`` (engine=, shards=, entries_per_s=,
+    ...) rides into the --json artifact for mechanical perf diffing."""
+    ROWS.append({"name": name, "us_per_call": us_per_call,
+                 "derived": derived, **meta})
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
@@ -33,11 +41,15 @@ def bench_fig3_ingest(full: bool) -> None:
             emit(f"fig3_ingest_opt_s{scale}_k{k}",
                  opt["wall_s"] * 1e6,
                  f"{opt['edges_per_s']:.0f} edges/s serial; "
-                 f"{opt['parallel_edges_per_s']:.0f} projected-parallel")
+                 f"{opt['parallel_edges_per_s']:.0f} projected-parallel",
+                 engine=opt.get("engine", "lsm"), shards=k,
+                 entries_per_s=opt["edges_per_s"])
             emit(f"fig3_ingest_naive_s{scale}_k{k}",
                  nai["wall_s"] * 1e6,
                  f"{nai['edges_per_s']:.0f} edges/s (single stream, "
-                 f"no partitioning)")
+                 f"no partitioning)",
+                 engine="naive", shards=1,
+                 entries_per_s=nai["edges_per_s"])
 
 
 def bench_fig3_batch_knob(full: bool) -> None:
@@ -46,7 +58,8 @@ def bench_fig3_batch_knob(full: bool) -> None:
         else (100_000, 500_000)
     for row in batch_sweep(scale=11, k=4, budgets=budgets):
         emit(f"fig3_batch_{row['char_budget']}", 0.0,
-             f"{row['edges_per_s']:.0f} edges/s")
+             f"{row['edges_per_s']:.0f} edges/s",
+             engine="lsm", shards=4, entries_per_s=row["edges_per_s"])
 
 
 def bench_fig3_straggler(full: bool) -> None:
@@ -54,7 +67,28 @@ def bench_fig3_straggler(full: bool) -> None:
     base = run_optimized(4, 11)
     steal = run_optimized(4, 11, steal=True)
     emit("fig3_straggler_worksteal", steal["wall_s"] * 1e6,
-         f"{steal['edges_per_s']:.0f} edges/s vs {base['edges_per_s']:.0f} push")
+         f"{steal['edges_per_s']:.0f} edges/s vs {base['edges_per_s']:.0f} push",
+         engine="lsm", shards=4, entries_per_s=steal["edges_per_s"])
+
+
+# ------------------------------------------- engine A/B (LSM vs single)
+def bench_engine_compare(full: bool) -> None:
+    from .ingest_bench import engine_compare
+    eps = 1 << 18 if full else 1 << 15
+    mem = max(1 << 12, min(1 << 15, eps // 8))
+    res = engine_compare(entries_per_shard=eps, shards=2,
+                         batch=max(1 << 10, mem // 2), memtable=mem)
+    for engine, r in res["engines"].items():
+        emit(f"engine_{engine}_ingest_{eps}", r["ingest_wall_s"] * 1e6,
+             f"{r['entries_per_s']:.0f} entries/s",
+             engine=engine, shards=2, entries_per_s=r["entries_per_s"])
+        emit(f"engine_{engine}_query_{eps}", r["query_wall_s"] * 1e6,
+             f"{r['queries_per_s']:.0f} queries/s "
+             f"flushed_on_read={r['flushed_on_read']}",
+             engine=engine, shards=2)
+    emit("engine_lsm_speedup", 0.0,
+         f"{res['lsm_ingest_speedup']:.2f}x ingest vs single-run",
+         engine="lsm", shards=2)
 
 
 # -------------------------------------------------------- Fig 4 (query)
@@ -66,7 +100,8 @@ def bench_fig4_query(full: bool) -> None:
     for r in rows:
         emit(f"fig4_{r['query']}_deg{r['degree']}", 0.0,
              f"{r['opt_edges_per_s']:.0f} edges/s "
-             f"(naive {r['naive_edges_per_s']:.0f})")
+             f"(naive {r['naive_edges_per_s']:.0f})",
+             engine="lsm", entries_per_s=r["opt_edges_per_s"])
 
 
 # ------------------------------------------- DB micro (compiled paths)
@@ -74,24 +109,31 @@ def bench_db_micro(full: bool) -> None:
     from repro.db.kvstore import ShardedTable
 
     n = 1 << 18
-    store = ShardedTable("micro", num_shards=1, capacity_per_shard=n * 2,
-                         batch_cap=n, id_capacity=1 << 22, use_pallas=False)
-    rng = np.random.default_rng(0)
-    rows = rng.integers(0, 1 << 22, n).astype(np.int32)
-    cols = rng.integers(0, 1 << 16, n).astype(np.int32)
-    vals = rng.normal(size=n).astype(np.float32)
-    t0 = time.time()
-    store.insert(rows, cols, vals)
-    store.tablets.rows.block_until_ready()
-    dt = time.time() - t0
-    emit("db_minor_compaction_262k", dt * 1e6, f"{n / dt:.0f} triples/s")
+    for engine in ("single", "lsm"):
+        store = ShardedTable(f"micro_{engine}", num_shards=1,
+                             capacity_per_shard=n * 2, batch_cap=n,
+                             id_capacity=1 << 22, use_pallas=False,
+                             engine=engine, memtable_cap=n)
+        rng = np.random.default_rng(0)
+        rows = rng.integers(0, 1 << 22, n).astype(np.int32)
+        cols = rng.integers(0, 1 << 16, n).astype(np.int32)
+        vals = rng.normal(size=n).astype(np.float32)
+        store.warmup()
+        t0 = time.time()
+        store.insert(rows, cols, vals)
+        store.flush()
+        dt = time.time() - t0
+        emit(f"db_minor_compaction_262k_{engine}", dt * 1e6,
+             f"{n / dt:.0f} triples/s", engine=engine, shards=1,
+             entries_per_s=n / dt)
 
-    q = rng.choice(rows, 4096).astype(np.int32)
-    store.query_rows(q[:16])  # warmup
-    t0 = time.time()
-    store.query_rows(q)
-    dt = time.time() - t0
-    emit("db_rank_query_4096", dt * 1e6, f"{4096 / dt:.0f} queries/s")
+        q = rng.choice(rows, 4096).astype(np.int32)
+        store.query_rows(q[:16])  # warmup
+        t0 = time.time()
+        store.query_rows(q)
+        dt = time.time() - t0
+        emit(f"db_rank_query_4096_{engine}", dt * 1e6,
+             f"{4096 / dt:.0f} queries/s", engine=engine, shards=1)
 
 
 # ------------------------------------------------- roofline (from dry-run)
@@ -116,11 +158,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write structured rows to PATH")
     args = ap.parse_args()
     benches = {
         "fig3": bench_fig3_ingest,
         "fig3_batch": bench_fig3_batch_knob,
         "fig3_straggler": bench_fig3_straggler,
+        "engine": bench_engine_compare,
         "fig4": bench_fig4_query,
         "db_micro": bench_db_micro,
         "roofline": bench_roofline_summary,
@@ -131,6 +176,10 @@ def main() -> None:
             continue
         print(f"# --- {name} ---", flush=True)
         fn(args.full)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": ROWS, "full": args.full}, f, indent=1)
+        print(f"# wrote {args.json}", flush=True)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,23 @@
+"""jax version compatibility shims shared across the codebase."""
+import jax
+
+if hasattr(jax, "shard_map"):  # jax >= 0.6: top-level, check_vma spelling
+    shard_map = jax.shard_map
+    SHARD_MAP_KW = {"check_vma": False}
+else:  # jax 0.4/0.5: experimental namespace, check_rep spelling
+    from jax.experimental.shard_map import shard_map
+    SHARD_MAP_KW = {"check_rep": False}
+
+def make_mesh_auto(shape, axes, devices=None):
+    """jax.make_mesh with Auto axis types on every jax version (the
+    explicit-sharding AxisType API only exists from jax 0.5)."""
+    kw = {} if devices is None else {"devices": devices}
+    try:
+        from jax.sharding import AxisType
+        kw["axis_types"] = (AxisType.Auto,) * len(axes)
+    except ImportError:
+        pass  # older jax: Auto is the only behavior
+    return jax.make_mesh(shape, axes, **kw)
+
+
+__all__ = ["SHARD_MAP_KW", "make_mesh_auto", "shard_map"]

@@ -1,11 +1,15 @@
 # The Accumulo-analogue database layer (DESIGN §2): mesh-sharded sorted KV
 # store + the paper's Listing-1 connector API + D4M 2.0 schema.
+# Storage engines: db.lsm (leveled runs, default) | legacy single-run tablet.
+# See src/repro/db/README.md for the storage architecture.
 from .connector import DBserver, Table, TablePair, dbinit, dbsetup, delete, put, putTriple
 from .schema import DegreeTable, EdgeSchema
 from .naive import NaiveTable
 from . import graphulo
+from . import lsm
 
 __all__ = [
     "DBserver", "Table", "TablePair", "dbinit", "dbsetup", "delete", "put",
     "putTriple", "DegreeTable", "EdgeSchema", "NaiveTable", "graphulo",
+    "lsm",
 ]

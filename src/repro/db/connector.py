@@ -51,8 +51,10 @@ class DBserver:
                  capacity_per_shard: int = 1 << 18, batch_cap: int = 1 << 15,
                  id_capacity: int = 1 << 22,
                  char_budget: int = batching.DEFAULT_CHAR_BUDGET,
-                 use_pallas: bool = False):  # True = TPU kernels (interpret
+                 use_pallas: bool = False,  # True = TPU kernels (interpret
                  # mode on CPU is validation-only; XLA path is the CPU path)
+                 engine: str = "lsm"):  # storage engine: "lsm" (leveled
+                 # runs, db/lsm) or "single" (legacy one-run tablet)
         assert num_shards * id_capacity < 2 ** 31, "id space must fit int32 routing"
         self.instance = instance
         self.num_shards = num_shards
@@ -61,6 +63,7 @@ class DBserver:
         self.id_capacity = id_capacity
         self.char_budget = char_budget
         self.use_pallas = use_pallas
+        self.engine = engine
         self.keydict = StringDict()          # shared row/col key universe
         self._sorted_keys: Optional[np.ndarray] = None
         self.tables: dict = {}
@@ -141,10 +144,23 @@ class Table:
             name, num_shards=server.num_shards,
             capacity_per_shard=server.capacity_per_shard,
             batch_cap=server.batch_cap, id_capacity=server.id_capacity,
-            combiner=combiner, use_pallas=server.use_pallas)
+            combiner=combiner, use_pallas=server.use_pallas,
+            engine=getattr(server, "engine", "lsm"))
         self.valdict: Optional[StringDict] = None  # set on first string put
+        self._deleted = False
+
+    def _check_live(self) -> None:
+        if self._deleted:
+            raise RuntimeError(
+                f"table {self.name!r} was deleted; re-bind via DB[name]")
+
+    def _mark_deleted(self) -> None:
+        """delete(): free the store's buffers and poison this handle."""
+        self._deleted = True
+        self.store.close()
 
     def nnz(self) -> int:
+        self._check_live()
         return self.store.nnz()
 
     # -------------------------------------------------------------- ingest
@@ -153,6 +169,7 @@ class Table:
         self.put_triple(r, c, v)
 
     def put_triple(self, rows, cols, vals) -> None:
+        self._check_live()
         rows = np.asarray(rows, dtype=object)
         cols = np.asarray(cols, dtype=object)
         vals = np.asarray(vals)
@@ -183,6 +200,7 @@ class Table:
         return Assoc(rows, cols, vals)
 
     def __getitem__(self, key) -> Assoc:
+        self._check_live()
         rsel, csel = key
         rids = self.server.resolve_selector(rsel)
         cids = self.server.resolve_selector(csel)
@@ -239,9 +257,15 @@ def putTriple(table, rows, cols, vals) -> None:
 
 
 def delete(table) -> None:
-    """Drop a table (or pair) from its server."""
+    """Drop a table (or pair) from its server AND release its storage.
+
+    The bound handle is poisoned: subsequent put/__getitem__/nnz raise
+    RuntimeError instead of silently operating on an orphaned store.
+    Re-binding the same name via ``DB[name]`` creates a fresh table.
+    """
     if isinstance(table, TablePair):
         delete(table.table)
         delete(table.table_t)
         return
     table.server.drop(table.name)
+    table._mark_deleted()

@@ -1,12 +1,22 @@
 """Mesh-sharded sorted key-value store — the Accumulo analogue (DESIGN §2).
 
-Each *tablet* is a fixed-capacity sorted run of (row_id, col_id) -> value
-entries on one mesh shard, range-partitioned by row id (pre-split tablets,
-as in the 100M-inserts/s Accumulo+D4M setup the paper cites). Ingest is a
-minor compaction: sort the incoming batch, merge-rank it into the run
-(Pallas ``merge_rank`` kernel), combine duplicates (Accumulo iterator
-semantics: last-wins versioning or a sum combiner), and compact. Queries
-are rank searches (Pallas ``sorted_search``) + bounded gathers.
+Each *tablet* holds (row_id, col_id) -> value entries on one mesh shard,
+range-partitioned by row id (pre-split tablets, as in the 100M-inserts/s
+Accumulo+D4M setup the paper cites). Two storage engines (see
+``src/repro/db/README.md``):
+
+  * ``engine="lsm"`` (default) — leveled sorted runs (``repro.db.lsm``):
+    memtable flushes are O(memtable), major compactions k-way merge runs
+    with the Pallas ``merge_rank`` kernel, reads go through bloom filters
+    + fence pointers without flushing, and a WAL + snapshots provide
+    crash recovery.
+  * ``engine="single"`` — one fixed-capacity sorted run per shard; every
+    flush merge-ranks the memtable into it (Pallas ``merge_rank``).
+    Queries are rank searches (Pallas ``sorted_search``) + bounded
+    gathers. Kept as the A/B baseline.
+
+Duplicate keys combine with Accumulo iterator semantics in both engines
+(last-wins versioning, sum/min/max combiners — ``db.iterators``).
 
 All device functions are jit-compatible (static capacities, explicit valid
 counts, I32_MAX key padding). Two drivers exist:
@@ -204,26 +214,42 @@ def _vmapped_insert(combiner: str, use_pallas: bool):
 
 
 class ShardedTable:
-    """Stacked-tablet driver: S tablets on the local device.
+    """Stacked-tablet driver: S tablet servers' state on the local device.
 
     Simulates S SPMD ingestors for the paper's Fig. 3 study; the distributed
     execution path with identical per-shard code is ``repro.db.spmd``.
 
     Writes land in a per-shard *memtable* (unsorted fixed buffer); a minor
-    compaction (sort + merge-rank into the sorted run) happens only when the
-    memtable fills — Accumulo's write path, and what keeps per-batch ingest
-    cost amortized instead of O(capacity) per mutation batch. Queries flush
-    first (simplest read-your-writes semantics).
+    compaction happens only when the memtable fills. Two storage engines sit
+    under that memtable:
+
+      * ``engine="lsm"`` (default) — leveled sorted runs (``db.lsm``):
+        flush costs O(memtable), major compactions k-way merge runs via the
+        Pallas merge_rank kernel, and reads serve from memtable + runs
+        through bloom filters and fence pointers WITHOUT flushing.
+      * ``engine="single"`` — the legacy single-sorted-run tablet: every
+        flush merge-ranks the memtable into one O(capacity) run (kept for
+        A/B benchmarking; reads flush owner shards first).
+
+    With ``wal_dir`` set (LSM only), every ``insert`` batch is logged to an
+    append-only WAL before it reaches the memtable, ``checkpoint()``
+    snapshots the runs, and ``db.lsm.recover(dir)`` rebuilds the table
+    after a crash.
     """
 
     def __init__(self, name: str, num_shards: int = 4,
                  capacity_per_shard: int = 1 << 18, batch_cap: int = 1 << 15,
                  id_capacity: int = 1 << 22, combiner: str = "last",
-                 use_pallas: bool = False, memtable_cap: int = None):
+                 use_pallas: bool = False, memtable_cap: int = None,
+                 engine: str = "lsm", l0_slots: int = 4, fanout: int = 4,
+                 wal_dir: str = None):
         # use_pallas=True runs the TPU kernels (interpret-mode on CPU — for
         # validation only; the XLA path is the CPU-performance path)
         assert combiner in COMBINERS
+        if engine not in ("lsm", "single"):
+            raise ValueError(f"unknown engine {engine!r}")
         self.name = name
+        self.engine = engine
         self.S = num_shards
         self.cap = capacity_per_shard
         self.batch_cap = batch_cap
@@ -232,19 +258,99 @@ class ShardedTable:
         self.use_pallas = use_pallas
         self.mem_cap = memtable_cap or max(batch_cap * 4,
                                            min(capacity_per_shard, 1 << 18))
-        self.tablets = jax.tree.map(
-            lambda *xs: jnp.stack(xs), *[tablet_empty(self.cap)] * num_shards
-        )
+        self._closed = False
+        if engine == "lsm":
+            from .lsm.engine import LSMRuns
+            self._runs = LSMRuns(num_shards, capacity_per_shard,
+                                 self.mem_cap, combiner, use_pallas,
+                                 l0_slots=l0_slots, fanout=fanout)
+            self.tablets = None
+        else:
+            self._runs = None
+            self.tablets = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[tablet_empty(self.cap)] * num_shards)
         self._mem_r = jnp.full((num_shards, self.mem_cap), I32_MAX, jnp.int32)
         self._mem_c = jnp.full((num_shards, self.mem_cap), I32_MAX, jnp.int32)
         self._mem_v = jnp.zeros((num_shards, self.mem_cap), jnp.float32)
         self._mem_n = np.zeros((num_shards,), np.int64)
+        # host mirror of memtable appends (per shard): LSM reads serve the
+        # unflushed tail without pulling device buffers. insert_routed()
+        # bypasses the host, which invalidates the mirror until next flush.
+        self._mem_mirror = [[] for _ in range(num_shards)]
+        self._mirror_ok = True
         self._insert = _vmapped_insert(combiner, use_pallas)
         self._append = _APPEND
         self._append_flat = _APPEND_FLAT
         self._shard_views: dict = {}  # per-shard tablet slices (read cache)
+        self._wal = None
+        self._wal_dir = None
+        if wal_dir is not None:
+            self.attach_wal(wal_dir)
+
+    # ------------------------------------------------------- durability
+    def attach_wal(self, wal_dir: str):
+        """Open (or re-open) the write-ahead log under ``wal_dir``."""
+        if self.engine != "lsm":
+            raise ValueError("WAL durability requires engine='lsm'")
+        import os
+        from .lsm.manifest import wal_path
+        from .lsm.wal import WriteAheadLog
+        os.makedirs(wal_dir, exist_ok=True)
+        if self._wal is not None:
+            self._wal.close()
+        self._wal_dir = wal_dir
+        self._wal = WriteAheadLog(wal_path(wal_dir))
+
+    def checkpoint(self) -> str:
+        """Flush the memtable, snapshot the runs, mark the WAL offset.
+        Returns the manifest path; ``db.lsm.recover`` consumes it."""
+        if self.engine != "lsm" or self._wal_dir is None:
+            raise ValueError("checkpoint() needs engine='lsm' and a wal_dir")
+        from .lsm.manifest import write_snapshot
+        self.flush()
+        return write_snapshot(self, self._wal_dir)
+
+    def close(self) -> None:
+        """Release buffers and refuse further use (connector delete())."""
+        if self._wal is not None:
+            self._wal.close()
+            self._wal = None
+        self._runs = None
+        self.tablets = None
+        self._mem_r = self._mem_c = self._mem_v = None
+        self._mem_n = np.zeros((self.S,), np.int64)
+        self._shard_views.clear()
+        self._closed = True
+
+    def _check_open(self):
+        if self._closed:
+            raise RuntimeError(f"table {self.name!r} has been deleted")
+
+    def warmup(self) -> None:
+        """Precompile the flush/compaction graphs (no state mutation) so
+        benchmark windows measure steady-state throughput, not jit time."""
+        self._check_open()
+        if self.engine == "lsm":
+            self._runs.warmup(self._mem_r, self._mem_c, self._mem_v)
+        else:
+            jax.block_until_ready(self._insert(
+                self.tablets, self._mem_r, self._mem_c, self._mem_v))
+
+    def engine_stats(self) -> dict:
+        """Observability: flush/compaction counts and bloom skip rates."""
+        if self.engine == "lsm":
+            st = dict(self._runs.stats)
+            st["l0_used"] = self._runs.l0_used
+            st["level_entries"] = [int(lv["n"].sum())
+                                   for lv in self._runs.levels]
+            return st
+        return {}
 
     def nnz(self) -> int:
+        self._check_open()
+        if self.engine == "lsm":
+            return sum(len(self.scan_shard(s)[0]) for s in range(self.S))
         self.flush()
         return int(self.tablets.n.sum())
 
@@ -270,8 +376,12 @@ class ShardedTable:
         bv[dest, slot] = vals
         return br, bc, bv
 
-    def insert(self, rows: np.ndarray, cols: np.ndarray, vals: np.ndarray):
-        """Host-side BatchWriter: bucket by owner + flat memtable append."""
+    def insert(self, rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+               _log: bool = True):
+        """Host-side BatchWriter: bucket by owner + flat memtable append.
+        With a WAL attached, the batch is journaled first (write-ahead);
+        ``_log=False`` is for WAL replay during recovery."""
+        self._check_open()
         rows = np.asarray(rows, np.int32)
         cols = np.asarray(cols, np.int32)
         vals = np.asarray(vals, np.float32)
@@ -280,6 +390,8 @@ class ShardedTable:
             return
         if n > self.mem_cap:
             raise OverflowError(f"batch {n} exceeds memtable {self.mem_cap}")
+        if _log and self._wal is not None:
+            self._wal.append(rows, cols, vals)
         dest = shard_of(rows, self.S, self.id_capacity)
         order = np.argsort(dest, kind="stable")
         dest, rows, cols, vals = dest[order], rows[order], cols[order], vals[order]
@@ -287,6 +399,12 @@ class ShardedTable:
         if (self._mem_n + counts_b > self.mem_cap).any():
             self.flush()
         ends = np.cumsum(counts_b)
+        if self.engine == "lsm" and self._mirror_ok:  # only LSM reads it
+            starts_m = ends - counts_b
+            for s in np.nonzero(counts_b)[0]:
+                self._mem_mirror[s].append(
+                    (rows[starts_m[s]:ends[s]], cols[starts_m[s]:ends[s]],
+                     vals[starts_m[s]:ends[s]]))
         slot = np.arange(n, dtype=np.int32) - (ends - counts_b)[dest]
         pad = (1 << max(n - 1, 1).bit_length()) - n  # bucket jit shapes
         if pad:
@@ -304,64 +422,145 @@ class ShardedTable:
 
     def insert_routed(self, br, bc, bv):
         """Memtable append of already-routed [S, batch_cap] buffers; minor
-        compaction when a shard's memtable would overflow."""
+        compaction when a shard's memtable would overflow. (Not journaled —
+        the routed path is the SPMD benchmark path, not the durable one.)"""
+        self._check_open()
         incoming = np.asarray((np.asarray(br) != I32_MAX).sum(axis=1))
         if (self._mem_n + incoming > self.mem_cap).any():
             self.flush()
+        self._mirror_ok = False  # device-side append: host mirror is stale
+        for m in self._mem_mirror:
+            m.clear()
         self._mem_r, self._mem_c, self._mem_v, counts = self._append(
             self._mem_r, self._mem_c, self._mem_v,
             jnp.asarray(self._mem_n, jnp.int32), br, bc, bv)
         self._mem_n = np.asarray(counts, np.int64)
 
     def flush(self) -> None:
-        """Minor compaction: merge the memtable into the sorted runs."""
+        """Minor compaction: memtable -> L0 run (LSM, O(memtable)) or merge
+        into the single sorted run (legacy, O(capacity))."""
+        self._check_open()
         if self._mem_n.max(initial=0) == 0:
             return
-        new = self._insert(self.tablets, self._mem_r, self._mem_c,
-                           self._mem_v)
-        if int(new.n.max()) > self.cap:
-            raise OverflowError(
-                f"tablet overflow in {self.name}: {int(new.n.max())} > {self.cap}")
-        self.tablets = new
-        self._shard_views.clear()
+        if self.engine == "lsm":
+            self._runs.flush_memtable(self._mem_r, self._mem_c, self._mem_v)
+        else:
+            new = self._insert(self.tablets, self._mem_r, self._mem_c,
+                               self._mem_v)
+            if int(new.n.max()) > self.cap:
+                raise OverflowError(
+                    f"tablet overflow in {self.name}: "
+                    f"{int(new.n.max())} > {self.cap}")
+            self.tablets = new
+            self._shard_views.clear()
         self._mem_r = jnp.full((self.S, self.mem_cap), I32_MAX, jnp.int32)
         self._mem_c = jnp.full((self.S, self.mem_cap), I32_MAX, jnp.int32)
         self._mem_v = jnp.zeros((self.S, self.mem_cap), jnp.float32)
         self._mem_n = np.zeros((self.S,), np.int64)
+        self._mem_mirror = [[] for _ in range(self.S)]
+        self._mirror_ok = True
+
+    def _mem_host(self, s: int):
+        """Host mirror of shard ``s``'s memtable, or None if stale."""
+        if not self._mirror_ok:
+            return None
+        if not self._mem_mirror[s]:
+            return (np.zeros(0, np.int32), np.zeros(0, np.int32),
+                    np.zeros(0, np.float32))
+        return tuple(np.concatenate([b[i] for b in self._mem_mirror[s]])
+                     for i in range(3))
+
+    def major_compact(self) -> None:
+        """Force a major compaction (LSM): flush, then merge all runs."""
+        self._check_open()
+        if self.engine != "lsm":
+            return
+        self.flush()
+        self._runs.major_compact()
 
     # -------------------------------------------------------------- query
     def query_rows(self, row_ids: np.ndarray, max_return: int = 256):
-        """Point queries; returns (row_id, col_id, val) numpy triples."""
-        self.flush()  # read-your-writes: queries see the memtable
+        """Point queries; returns (row_id, col_id, val) numpy triples.
+
+        LSM engine: served from memtable + runs (bloom/fence read path) —
+        point reads never trigger a flush. Legacy engine: flushes only when
+        a QUERIED shard's memtable is non-empty (read-your-writes without
+        the old unconditional global flush).
+        """
+        self._check_open()
         row_ids = np.asarray(row_ids, np.int32)
         owner = shard_of(row_ids, self.S, self.id_capacity)
         out_r, out_c, out_v = [], [], []
-        for s in np.unique(owner):
-            q = row_ids[owner == s]
-            t = self._shard_views.get(int(s))
-            if t is None:  # slicing the stacked arrays copies ~MBs; cache it
-                t = jax.tree.map(lambda x: x[s], self.tablets)
-                self._shard_views[int(s)] = t
-            cols, vals, ok, cnt = tablet_query_rows(
-                t, jnp.asarray(q), max_return, use_pallas=self.use_pallas)
-            cnt = np.asarray(cnt)
-            if cnt.max(initial=0) > max_return:  # widen and retry (batch scanner)
+        if self.engine == "lsm":
+            for s in np.unique(owner):
+                q = row_ids[owner == s]
+                # duplicate query ids return duplicate results (legacy-
+                # engine parity): query unique ids, then re-expand
+                uq, ucnt = np.unique(q, return_counts=True)
+                mem_n = int(self._mem_n[s])
+                mh = self._mem_host(int(s))
+                if mh is None and mem_n:  # mirror stale: pull device bufs
+                    mem = (self._mem_r[s], self._mem_c[s], self._mem_v[s])
+                else:
+                    mem = (None, None, None)
+                r, c, v = self._runs.query_shard(
+                    int(s), uq, *mem, mem_n, max_return, mem_host=mh)
+                if len(r) and (ucnt > 1).any():
+                    rep = ucnt[np.searchsorted(uq, r)]
+                    r, c, v = (np.repeat(r, rep), np.repeat(c, rep),
+                               np.repeat(v, rep))
+                out_r.append(r); out_c.append(c); out_v.append(v)
+        else:
+            owners = np.unique(owner)
+            if self._mem_n[owners].max(initial=0) > 0:
+                self.flush()
+            for s in owners:
+                q = row_ids[owner == s]
+                t = self._shard_views.get(int(s))
+                if t is None:  # slicing stacked arrays copies ~MBs; cache it
+                    t = jax.tree.map(lambda x: x[s], self.tablets)
+                    self._shard_views[int(s)] = t
                 cols, vals, ok, cnt = tablet_query_rows(
-                    t, jnp.asarray(q), int(cnt.max()), use_pallas=self.use_pallas)
-            ok = np.asarray(ok)
-            cols, vals = np.asarray(cols), np.asarray(vals)
-            qi, ki = np.nonzero(ok)
-            out_r.append(q[qi])
-            out_c.append(cols[qi, ki])
-            out_v.append(vals[qi, ki])
+                    t, jnp.asarray(q), max_return,
+                    use_pallas=self.use_pallas)
+                cnt = np.asarray(cnt)
+                if cnt.max(initial=0) > max_return:  # widen (batch scanner)
+                    cols, vals, ok, cnt = tablet_query_rows(
+                        t, jnp.asarray(q), int(cnt.max()),
+                        use_pallas=self.use_pallas)
+                ok = np.asarray(ok)
+                cols, vals = np.asarray(cols), np.asarray(vals)
+                qi, ki = np.nonzero(ok)
+                out_r.append(q[qi])
+                out_c.append(cols[qi, ki])
+                out_v.append(vals[qi, ki])
         if not out_r:
             z = np.zeros(0, np.int32)
             return z, z.copy(), np.zeros(0, np.float32)
         return (np.concatenate(out_r), np.concatenate(out_c),
                 np.concatenate(out_v))
 
+    def scan_shard(self, s: int):
+        """One shard's combined sorted triples (LSM; no flush)."""
+        self._check_open()
+        if self.engine != "lsm":
+            raise ValueError("scan_shard() requires engine='lsm'")
+        mem_n = int(self._mem_n[s])
+        mh = self._mem_host(s)
+        if mh is None and mem_n:
+            mem = (self._mem_r[s], self._mem_c[s], self._mem_v[s])
+        else:
+            mem = (None, None, None)
+        return self._runs.scan_shard(s, *mem, mem_n, mem_host=mh)
+
     def scan(self):
-        """Full-table scan -> (row_ids, col_ids, vals)."""
+        """Full-table scan -> (row_ids, col_ids, vals), sorted per shard."""
+        self._check_open()
+        if self.engine == "lsm":
+            parts = [self.scan_shard(s) for s in range(self.S)]
+            return (np.concatenate([p[0] for p in parts]),
+                    np.concatenate([p[1] for p in parts]),
+                    np.concatenate([p[2] for p in parts]))
         self.flush()
         rows = np.asarray(self.tablets.rows)
         cols = np.asarray(self.tablets.cols)

@@ -1,0 +1,84 @@
+"""Per-run bloom filters — packed uint32 bitsets with vectorized hashing.
+
+Accumulo keeps a bloom filter per RFile so point lookups skip files that
+cannot contain the key; here every sorted run (L0 flush or leveled run)
+carries one over its ROW ids (queries are row point-lookups). Build and
+probe are pure jnp: k multiplicative xor-shift hashes, a boolean scatter
+(collision-safe, unlike packed-word adds), then a pack to uint32 words so
+the resident state is bits/8 bytes per key.
+
+Sizing: ``BITS_PER_KEY`` = 8 with ``NUM_HASHES`` = 4 gives ~2.4% false
+positives at full occupancy — each false positive costs one needless rank
+search, never a wrong result.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...kernels.common import I32_MAX
+
+NUM_HASHES = 4
+BITS_PER_KEY = 8
+
+# odd 32-bit constants (xxhash/murmur finalizer family)
+_MULTS = (0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F)
+
+
+def num_words(run_capacity: int) -> int:
+    """uint32 words for a run of ``run_capacity`` keys (pow2, >= 2)."""
+    bits = max(64, run_capacity * BITS_PER_KEY)
+    bits = 1 << (bits - 1).bit_length()
+    return bits // 32
+
+
+def _hash(keys: jax.Array, mult: int, n_bits: int) -> jax.Array:
+    """Multiplicative xor-shift hash of int32 keys into [0, n_bits)."""
+    h = keys.astype(jnp.uint32) * jnp.uint32(mult)
+    h = h ^ (h >> 15)
+    h = h * jnp.uint32(0x2C1B3C6D)
+    h = h ^ (h >> 13)
+    return (h & jnp.uint32(n_bits - 1)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_words",))
+def bloom_build(rows: jax.Array, n_words: int) -> jax.Array:
+    """Build a packed filter over the valid (!= I32_MAX) row ids.
+
+    Scatters into a boolean bitset first (set() is idempotent, so same-word
+    collisions are safe), then packs 32 bools per uint32 word.
+    """
+    n_bits = n_words * 32
+    valid = rows != I32_MAX
+    bits = jnp.zeros((n_bits,), jnp.bool_)
+    for mult in _MULTS[:NUM_HASHES]:
+        idx = jnp.where(valid, _hash(rows, mult, n_bits), n_bits)
+        bits = bits.at[idx].set(True, mode="drop")
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    return (bits.reshape(n_words, 32).astype(jnp.uint32) * weights).sum(
+        axis=1, dtype=jnp.uint32)
+
+
+@jax.jit
+def bloom_maybe_contains(words: jax.Array, q: jax.Array) -> jax.Array:
+    """bool[Q]: False guarantees the row is absent from the run."""
+    n_bits = words.shape[-1] * 32
+    hit = jnp.ones(q.shape, jnp.bool_)
+    for mult in _MULTS[:NUM_HASHES]:
+        h = _hash(q, mult, n_bits)
+        bit = (words[..., h >> 5] >> (h & 31).astype(jnp.uint32)) & 1
+        hit = hit & (bit == 1)
+    return hit
+
+
+def fence_build(rows: jax.Array, block: int) -> jax.Array:
+    """Fence pointers: first row id of every ``block``-entry block.
+
+    The in-memory analogue of RFile index blocks: a query's start position
+    is bracketed to one block by searching the (tiny) fence array, and runs
+    whose [fence[0], last-row] range excludes every queried row are skipped
+    without touching the run itself.
+    """
+    return rows[::block]

@@ -1,0 +1,124 @@
+"""Snapshot manifest + crash recovery for the LSM engine.
+
+Durability contract (Accumulo-shaped):
+
+  * every ingest batch is appended to the WAL before it touches the
+    memtable (``ShardedTable.insert`` with ``wal_dir`` set);
+  * ``checkpoint()`` minor-compacts the memtable, then atomically writes a
+    snapshot of all sorted runs plus ``MANIFEST.json`` recording the WAL
+    byte offset the snapshot covers;
+  * ``recover(dir)`` rebuilds the table: construct from the manifest's
+    config, load the snapshot runs, replay only the WAL suffix past the
+    recorded offset. A torn WAL tail (simulated crash) is discarded by the
+    WAL's CRC framing.
+
+The string key dictionary is *not* persisted here — recovery restores the
+encoded (row_id, col_id, value) store; connector-level dictionary
+durability is a ROADMAP follow-on.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+import numpy as np
+
+MANIFEST = "MANIFEST.json"
+SNAPSHOT = "snapshot.npz"
+WAL_FILE = "wal.log"
+
+_CONFIG_KEYS = ("num_shards", "capacity_per_shard", "batch_cap",
+                "id_capacity", "combiner", "use_pallas", "mem_cap",
+                "l0_slots", "fanout")
+
+
+def wal_path(dirpath: str) -> str:
+    return os.path.join(dirpath, WAL_FILE)
+
+
+def write_snapshot(table, dirpath: str) -> str:
+    """Persist ``table``'s run state + manifest; returns the manifest path.
+
+    Caller must have flushed the memtable first (``Table.checkpoint`` does);
+    the manifest's ``wal_offset`` then covers everything in the snapshot, so
+    recovery replays exactly the post-snapshot suffix.
+    """
+    os.makedirs(dirpath, exist_ok=True)
+    runs = table._runs  # LSM engine only
+    snap_tmp = os.path.join(dirpath, SNAPSHOT + ".tmp")
+    with open(snap_tmp, "wb") as f:
+        np.savez(f, **runs.state_arrays())
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(snap_tmp, os.path.join(dirpath, SNAPSHOT))
+    man = {
+        "format": 1,
+        "name": table.name,
+        "config": {
+            "num_shards": table.S,
+            "capacity_per_shard": table.cap,
+            "batch_cap": table.batch_cap,
+            "id_capacity": table.id_capacity,
+            "combiner": table.combiner,
+            "use_pallas": table.use_pallas,
+            "mem_cap": table.mem_cap,
+            "l0_slots": runs.K0,
+            "fanout": runs.fanout,
+        },
+        "snapshot": SNAPSHOT,
+        "wal": WAL_FILE,
+        "wal_offset": table._wal.tell() if table._wal else 0,
+    }
+    man_tmp = os.path.join(dirpath, MANIFEST + ".tmp")
+    with open(man_tmp, "w") as f:
+        json.dump(man, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(man_tmp, os.path.join(dirpath, MANIFEST))
+    return os.path.join(dirpath, MANIFEST)
+
+
+def recover(dirpath: str):
+    """Rebuild a ``ShardedTable`` (engine='lsm') after a crash.
+
+    Works from any consistent prefix of (manifest?, snapshot?, WAL): with no
+    manifest the whole WAL replays into a table that must be given its
+    config via the WAL-only path; with a manifest, snapshot runs load
+    directly and only the WAL suffix replays.
+    """
+    from ..kvstore import ShardedTable
+    from .wal import WriteAheadLog
+
+    man_path = os.path.join(dirpath, MANIFEST)
+    if not os.path.exists(man_path):
+        raise FileNotFoundError(
+            f"no {MANIFEST} in {dirpath}; call checkpoint() at least once "
+            "(WAL-only recovery needs the config the manifest records)")
+    with open(man_path) as f:
+        man = json.load(f)
+    cfg = man["config"]
+    table = ShardedTable(
+        man.get("name", "recovered"), engine="lsm",
+        num_shards=cfg["num_shards"],
+        capacity_per_shard=cfg["capacity_per_shard"],
+        batch_cap=cfg["batch_cap"], id_capacity=cfg["id_capacity"],
+        combiner=cfg["combiner"], use_pallas=cfg["use_pallas"],
+        memtable_cap=cfg["mem_cap"], l0_slots=cfg["l0_slots"],
+        fanout=cfg["fanout"])
+    snap = os.path.join(dirpath, man["snapshot"])
+    if os.path.exists(snap):
+        with np.load(snap) as z:
+            table._runs.load_state({k: z[k] for k in z.files})
+    # replay the post-snapshot WAL suffix (torn tail drops at CRC check)
+    wal_file = os.path.join(dirpath, man["wal"])
+    for rows, cols, vals in WriteAheadLog.replay(
+            wal_file, start=man["wal_offset"]):
+        table.insert(np.asarray(rows), np.asarray(cols), np.asarray(vals),
+                     _log=False)
+    # chop any torn tail BEFORE re-appending: otherwise post-recovery
+    # records land after the corrupt bytes and are unreachable next time
+    WriteAheadLog.truncate_torn_tail(wal_file)
+    # recovered table keeps journaling to the same WAL
+    table.attach_wal(dirpath)
+    return table

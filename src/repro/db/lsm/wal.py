@@ -1,0 +1,123 @@
+"""Append-only write-ahead log for triple batches (durability layer).
+
+Accumulo logs every mutation to a write-ahead log before it reaches the
+in-memory map, so a crashed tablet server replays the tail on restart. The
+adaptation logs ingest batches of already-encoded (row_id, col_id, value)
+triples; string-dictionary durability is a separate concern (ROADMAP).
+
+Record format (little-endian), one record per ``append``::
+
+    u32 n        number of triples
+    u32 crc      crc32 of the payload
+    payload      n * int32 rows | n * int32 cols | n * float32 vals
+
+Replay stops at the first torn or corrupt record (crash-consistent: a
+partially flushed tail is discarded, never misparsed). ``tell()`` exposes
+the byte offset so a snapshot can mark how much of the log it covers and
+recovery can replay only the suffix.
+"""
+from __future__ import annotations
+
+import os
+import struct
+import zlib
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+_HEADER = b"RLSMWAL1"
+_REC = struct.Struct("<II")
+
+Batch = Tuple[np.ndarray, np.ndarray, np.ndarray]
+
+
+class WriteAheadLog:
+    """Single-writer append-only log; safe to re-open for replay."""
+
+    def __init__(self, path: str, sync: bool = False):
+        self.path = path
+        self.sync = sync
+        exists = os.path.exists(path) and os.path.getsize(path) > 0
+        self._f = open(path, "ab")
+        if not exists:
+            self._f.write(_HEADER)
+            self._f.flush()
+
+    # ------------------------------------------------------------ writing
+    def append(self, rows: np.ndarray, cols: np.ndarray,
+               vals: np.ndarray) -> int:
+        """Log one batch; returns the byte offset AFTER the record."""
+        payload = (np.asarray(rows, "<i4").tobytes()
+                   + np.asarray(cols, "<i4").tobytes()
+                   + np.asarray(vals, "<f4").tobytes())
+        self._f.write(_REC.pack(len(rows), zlib.crc32(payload)))
+        self._f.write(payload)
+        self._f.flush()
+        if self.sync:
+            os.fsync(self._f.fileno())
+        return self._f.tell()
+
+    def tell(self) -> int:
+        return self._f.tell()
+
+    def close(self) -> None:
+        self._f.close()
+
+    # ------------------------------------------------------------ replay
+    @staticmethod
+    def valid_end(path: str) -> int:
+        """Byte offset after the last intact record (header if empty)."""
+        if not os.path.exists(path):
+            return 0
+        with open(path, "rb") as f:
+            if f.read(len(_HEADER)) != _HEADER:
+                return 0
+            end = f.tell()
+            while True:
+                head = f.read(_REC.size)
+                if len(head) < _REC.size:
+                    return end
+                n, crc = _REC.unpack(head)
+                payload = f.read(12 * n)
+                if len(payload) < 12 * n or zlib.crc32(payload) != crc:
+                    return end
+                end = f.tell()
+
+    @staticmethod
+    def truncate_torn_tail(path: str) -> int:
+        """Drop a torn/corrupt tail so future appends stay reachable by
+        replay (a crash mid-append otherwise poisons the log: records
+        appended after the torn bytes would never replay). Returns the
+        valid end offset."""
+        end = WriteAheadLog.valid_end(path)
+        if os.path.exists(path) and os.path.getsize(path) > end > 0:
+            with open(path, "r+b") as f:
+                f.truncate(end)
+        return end
+
+    @staticmethod
+    def replay(path: str, start: int = 0) -> Iterator[Batch]:
+        """Yield logged batches from byte offset ``start`` (0 = whole log).
+
+        Tolerates a torn tail: a record whose header or payload is short,
+        or whose CRC mismatches, ends the iteration (simulated crash).
+        """
+        if not os.path.exists(path):
+            return
+        with open(path, "rb") as f:
+            if f.read(len(_HEADER)) != _HEADER:
+                return
+            if start > len(_HEADER):
+                f.seek(start)
+            while True:
+                head = f.read(_REC.size)
+                if len(head) < _REC.size:
+                    return
+                n, crc = _REC.unpack(head)
+                payload = f.read(12 * n)
+                if len(payload) < 12 * n or zlib.crc32(payload) != crc:
+                    return  # torn/corrupt tail
+                rows = np.frombuffer(payload[: 4 * n], "<i4")
+                cols = np.frombuffer(payload[4 * n: 8 * n], "<i4")
+                vals = np.frombuffer(payload[8 * n:], "<f4")
+                yield rows, cols, vals

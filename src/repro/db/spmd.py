@@ -15,6 +15,7 @@ exercised by tests/test_spmd_db.py (8 fake devices) and launch/ingest.py
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Tuple
 
@@ -24,6 +25,9 @@ from jax.sharding import PartitionSpec as P
 
 from ..kernels.common import I32_MAX
 from .kvstore import Tablet, shard_of_dev, tablet_insert
+
+from ..compat import SHARD_MAP_KW as _SHARD_MAP_KW
+from ..compat import shard_map as _shard_map
 
 
 def _bucket_local(br, bc, bv, num_shards: int, id_capacity: int):
@@ -59,10 +63,10 @@ def make_spmd_ingest_step(mesh, axis: str, num_shards: int, id_capacity: int,
 
     spec_t = Tablet(rows=P(axis, None), cols=P(axis, None),
                     vals=P(axis, None), n=P(axis))
-    fn = jax.shard_map(shard_fn, mesh=mesh,
-                       in_specs=(spec_t, P(axis, None), P(axis, None),
-                                 P(axis, None)),
-                       out_specs=spec_t, check_vma=False)
+    fn = _shard_map(shard_fn, mesh=mesh,
+                    in_specs=(spec_t, P(axis, None), P(axis, None),
+                              P(axis, None)),
+                    out_specs=spec_t, **_SHARD_MAP_KW)
     return jax.jit(fn)
 
 
@@ -71,3 +75,120 @@ def stacked_empty(num_shards: int, capacity: int) -> Tablet:
     one = tablet_empty(capacity)
     return jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (num_shards,) + x.shape), one)
+
+
+# --------------------------------------------------------------------------
+# LSM write path on the mesh: ingest = all_to_all + L0 append (O(batch)),
+# major compaction = shard-local k-way merge of the L0 stack into the level
+# run. This is what makes per-step ingest cost independent of table size —
+# the legacy step above re-merges the whole tablet every step.
+# --------------------------------------------------------------------------
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["rows", "cols", "vals", "k"], meta_fields=[])
+@dataclasses.dataclass
+class L0Stack:
+    """Per-shard stack of L0 sorted runs: [slots, run_cap] + #used runs."""
+    rows: jax.Array  # int32[slots, run_cap]
+    cols: jax.Array  # int32[slots, run_cap]
+    vals: jax.Array  # float32[slots, run_cap]
+    k: jax.Array     # int32 number of used slots
+
+
+def l0_stacked_empty(num_shards: int, slots: int, run_cap: int) -> L0Stack:
+    return L0Stack(
+        rows=jnp.full((num_shards, slots, run_cap), I32_MAX, jnp.int32),
+        cols=jnp.full((num_shards, slots, run_cap), I32_MAX, jnp.int32),
+        vals=jnp.zeros((num_shards, slots, run_cap), jnp.float32),
+        k=jnp.zeros((num_shards,), jnp.int32),
+    )
+
+
+def _l0_spec(axis: str) -> L0Stack:
+    return L0Stack(rows=P(axis, None, None), cols=P(axis, None, None),
+                   vals=P(axis, None, None), k=P(axis))
+
+
+def make_spmd_lsm_ingest_step(mesh, axis: str, num_shards: int,
+                              id_capacity: int, combiner: str = "last"):
+    """LSM ingest step: route a batch, sort + dedup it, append as one L0 run.
+
+    Per-shard cost is O(S·bcap log) regardless of how much data the table
+    already holds; compaction is deferred to ``make_spmd_lsm_compact_step``.
+    The caller MUST compact when ``k`` reaches ``slots`` before the next
+    step: a step against a full stack is a no-op for that shard (``k``
+    saturates at ``slots`` so the host check keeps firing, and the batch
+    is NOT ingested — re-submit it after compacting).
+    """
+    from .kvstore import _dedup_combine
+
+    def shard_fn(l0: L0Stack, br, bc, bv):
+        me = jax.tree.map(lambda x: x[0], l0)
+        send = _bucket_local(br[0], bc[0], bv[0], num_shards, id_capacity)
+        rr = jax.lax.all_to_all(send[0], axis, 0, 0).reshape(-1)
+        rc = jax.lax.all_to_all(send[1], axis, 0, 0).reshape(-1)
+        rv = jax.lax.all_to_all(send[2], axis, 0, 0).reshape(-1)
+        order = jnp.lexsort((rc, rr))
+        sr, sc, sv = rr[order], rc[order], rv[order]
+        keep, out_v = _dedup_combine(sr, sc, sv, combiner)
+        cap = sr.shape[0]
+        pos = jnp.cumsum(keep) - 1
+        idx = jnp.where(keep, pos, cap)
+        run_r = jnp.full((cap,), I32_MAX, jnp.int32).at[idx].set(sr, mode="drop")
+        run_c = jnp.full((cap,), I32_MAX, jnp.int32).at[idx].set(sc, mode="drop")
+        run_v = jnp.zeros((cap,), jnp.float32).at[idx].set(out_v, mode="drop")
+        slots = me.rows.shape[0]
+        # full stack: the .at[slots] scatter drops (out of bounds) and k
+        # saturates — see the driver contract in the docstring
+        new = L0Stack(rows=me.rows.at[me.k].set(run_r, mode="drop"),
+                      cols=me.cols.at[me.k].set(run_c, mode="drop"),
+                      vals=me.vals.at[me.k].set(run_v, mode="drop"),
+                      k=jnp.minimum(me.k + 1, slots))
+        return jax.tree.map(lambda x: x[None], new)
+
+    fn = _shard_map(shard_fn, mesh=mesh,
+                    in_specs=(_l0_spec(axis), P(axis, None), P(axis, None),
+                              P(axis, None)),
+                    out_specs=_l0_spec(axis), **_SHARD_MAP_KW)
+    return jax.jit(fn)
+
+
+def make_spmd_lsm_compact_step(mesh, axis: str, combiner: str = "last",
+                               use_pallas: bool = False):
+    """Major compaction on the mesh: k-way merge each shard's L0 runs with
+    its level run (Tablet) into a new level run; L0 empties."""
+    from ..kernels.common import INTERPRET
+    from ..kernels.merge_rank import kway_merge
+    from .kvstore import _dedup_combine
+
+    def shard_fn(l0: L0Stack, level: Tablet):
+        me = jax.tree.map(lambda x: x[0], l0)
+        lv = jax.tree.map(lambda x: x[0], level)
+        slots = me.rows.shape[0]
+        runs = [(lv.rows, lv.cols, lv.vals)]  # level run = oldest
+        runs += [(me.rows[i], me.cols[i], me.vals[i]) for i in range(slots)]
+        mr, mc, mv = kway_merge(runs, use_pallas=use_pallas,
+                                interpret=INTERPRET)
+        keep, out_v = _dedup_combine(mr, mc, mv, combiner)
+        cap = lv.rows.shape[0]
+        pos = jnp.cumsum(keep) - 1
+        idx = jnp.where(keep, pos, cap)  # host checks n for overflow
+        new_lv = Tablet(
+            rows=jnp.full((cap,), I32_MAX, jnp.int32).at[idx].set(mr, mode="drop"),
+            cols=jnp.full((cap,), I32_MAX, jnp.int32).at[idx].set(mc, mode="drop"),
+            vals=jnp.zeros((cap,), jnp.float32).at[idx].set(out_v, mode="drop"),
+            n=keep.sum().astype(jnp.int32),
+        )
+        empty = L0Stack(rows=jnp.full_like(me.rows, I32_MAX),
+                        cols=jnp.full_like(me.cols, I32_MAX),
+                        vals=jnp.zeros_like(me.vals),
+                        k=jnp.zeros_like(me.k))
+        return (jax.tree.map(lambda x: x[None], empty),
+                jax.tree.map(lambda x: x[None], new_lv))
+
+    spec_t = Tablet(rows=P(axis, None), cols=P(axis, None),
+                    vals=P(axis, None), n=P(axis))
+    fn = _shard_map(shard_fn, mesh=mesh,
+                    in_specs=(_l0_spec(axis), spec_t),
+                    out_specs=(_l0_spec(axis), spec_t), **_SHARD_MAP_KW)
+    return jax.jit(fn)

@@ -1,4 +1,4 @@
-from .ops import merge_sorted
+from .ops import kway_merge, merge_sorted
 from .ref import merge_sorted_ref
 
-__all__ = ["merge_sorted", "merge_sorted_ref"]
+__all__ = ["kway_merge", "merge_sorted", "merge_sorted_ref"]

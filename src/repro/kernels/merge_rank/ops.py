@@ -54,3 +54,38 @@ def merge_sorted(ar, ac, av, br, bc, bv, block_q: int = 256,
     # valid A entries can never share a slot with valid B entries; pads from
     # A (written last) may overwrite pads from B — both are I32_MAX, fine.
     return out_r, out_c, out_v
+
+
+def kway_merge(runs, use_pallas: bool = True, interpret: bool = INTERPRET):
+    """Merge k sorted runs into one by pairwise reduction (major compaction).
+
+    ``runs`` is a list of (rows, cols, vals) triples sorted lex by (r, c)
+    with I32_MAX key pads, ordered OLDEST FIRST. Each pairwise merge keeps
+    the left (older) side first on equal keys, and the tree reduction only
+    ever merges a prefix-contiguous older group with a newer one, so the
+    merged output preserves global age order within every equal-key group.
+    A single downstream dedup pass therefore implements every Accumulo
+    combiner in ``db.iterators`` (last = newest wins, sum/min/max see all
+    contributions exactly once).
+
+    Returns (rows, cols, vals) of length sum(len(run)); valid entries first.
+    """
+    if not runs:
+        raise ValueError("kway_merge needs at least one run")
+    merge = merge_sorted if use_pallas else _merge_ref
+    runs = list(runs)
+    while len(runs) > 1:
+        nxt = [
+            merge(*runs[i], *runs[i + 1], **(
+                {"interpret": interpret} if use_pallas else {}))
+            for i in range(0, len(runs) - 1, 2)
+        ]
+        if len(runs) % 2:
+            nxt.append(runs[-1])
+        runs = nxt
+    return runs[0]
+
+
+def _merge_ref(ar, ac, av, br, bc, bv):
+    from .ref import merge_sorted_ref
+    return merge_sorted_ref(ar, ac, av, br, bc, bv)

@@ -161,19 +161,25 @@ class HloCostModel:
                 continue
             if op == "dot":
                 ops_m = _OPERANDS_RE.search(line[m.end() - 1:])
-                lhs_name = None
+                lhs_dims = None
                 if ops_m:
-                    first = ops_m.group(1).split(",")[0].strip()
-                    lhs_name = first.lstrip("%")
+                    operands = ops_m.group(1)
+                    if "[" in operands:  # older XLA: inline operand shapes
+                        found = _dims(operands)
+                        if found:
+                            lhs_dims = found[0][1]
+                    else:
+                        lhs_name = operands.split(",")[0].strip().lstrip("%")
+                        if lhs_name in shapes:
+                            found = _dims(shapes[lhs_name])
+                            if found:
+                                lhs_dims = found[0][1]
                 contract = _LHS_CONTRACT_RE.search(line)
                 c_elems = 1
-                if lhs_name and lhs_name in shapes and contract:
-                    lhs_dims = _dims(shapes[lhs_name])
-                    if lhs_dims:
-                        dims = lhs_dims[0][1]
-                        for d in contract.group(1).split(","):
-                            if d:
-                                c_elems *= dims[int(d)]
+                if lhs_dims is not None and contract:
+                    for d in contract.group(1).split(","):
+                        if d:
+                            c_elems *= lhs_dims[int(d)]
                 out_elems = 1
                 for _, ds in _dims(out_shape):
                     for d in ds:
@@ -224,6 +230,8 @@ class HloCostModel:
         ops_m = _OPERANDS_RE.search(rest)
         if not ops_m:
             return 0
+        if "[" in ops_m.group(1):  # older XLA: inline operand shapes
+            return _shape_bytes(ops_m.group(1))
         total = 0
         for tok in ops_m.group(1).split(","):
             tok = tok.strip().lstrip("%")

@@ -7,7 +7,6 @@ from __future__ import annotations
 
 def make_production_mesh(*, multi_pod: bool = False):
     import jax
-    from jax.sharding import AxisType
 
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
@@ -19,8 +18,8 @@ def make_production_mesh(*, multi_pod: bool = False):
         raise RuntimeError(
             f"mesh {shape} needs {n} devices, found {len(devices)} — run "
             "under XLA_FLAGS=--xla_force_host_platform_device_count=512")
-    return jax.make_mesh(shape, axes, devices=devices[:n],
-                         axis_types=(AxisType.Auto,) * len(axes))
+    from ..compat import make_mesh_auto
+    return make_mesh_auto(shape, axes, devices=devices[:n])
 
 
 def batch_axes(multi_pod: bool):

@@ -1,0 +1,56 @@
+"""Hypothesis shim: real hypothesis when installed, otherwise a tiny
+deterministic sampler so the property tests still exercise their invariants
+(fixed seed, same @given/@settings surface) instead of failing collection.
+Covers exactly the strategy surface these tests use: integers, sampled_from,
+lists."""
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+        @staticmethod
+        def sampled_from(xs):
+            xs = list(xs)
+            return _Strategy(lambda rng: xs[int(rng.integers(0, len(xs)))])
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elem.draw(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+    st = _Strategies()
+
+    def settings(**kw):
+        def deco(fn):
+            fn._max_examples = kw.get("max_examples", 20)
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            def run():  # zero-arg so pytest sees no fixture params
+                n = getattr(run, "_max_examples",
+                            getattr(fn, "_max_examples", 20))
+                rng = np.random.default_rng(0)
+                for _ in range(n):
+                    fn(*[s.draw(rng) for s in strats])
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            return run
+        return deco
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

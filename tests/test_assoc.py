@@ -1,7 +1,7 @@
 """Unit + property tests for associative arrays (paper §II semantics)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import Assoc, split_str
 

@@ -2,7 +2,7 @@
 combiners, overflow back-pressure, naive-baseline equivalence."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import Assoc
 from repro.data.graph500 import graph500_triples

@@ -87,7 +87,7 @@ from repro.configs import get_reduced
 from repro.models import build, init_params, sharding_tree
 from repro.models.spec import ShardingRules
 from repro.train import checkpoint
-from jax.sharding import AxisType
+from repro.compat import make_mesh_auto
 
 model = build(get_reduced("smollm-135m"))
 params = init_params(model.param_specs, jax.random.key(1))
@@ -96,9 +96,8 @@ checkpoint.save(ckpt, 1, params)
 
 # restore onto DP=8 then DP=4 ("node failure -> shrink") meshes
 for dp in (8, 4):
-    mesh = jax.make_mesh((dp, 1), ("data", "model"),
-                         devices=jax.devices()[:dp],
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh_auto((dp, 1), ("data", "model"),
+                          devices=jax.devices()[:dp])
     rules = ShardingRules(batch=("data",), fsdp="data")
     sh = sharding_tree(model.param_specs, rules, mesh)
     got, _ = checkpoint.restore(ckpt, params, shardings=sh)
