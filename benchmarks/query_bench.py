@@ -6,15 +6,22 @@ Protocol mirrors §IV-B: ingest a large power-law graph + degree table
 single-vertex row (SVR), single-vertex column (SVC), multi-vertex row
 (MVR, 5 vertices), multi-vertex column (MVC) — and measure edges/s.
 Column queries exercise the transpose-table routing.
+
+``fused_read_compare`` is the read-path A/B behind ``BENCH_query.json``:
+point-read latency of the fused single-dispatch LSM path vs the per-run
+baseline as the number of resident runs per shard grows (fig4 SVR/SVC
+latency is dispatch-bound, so fused wins once several runs are resident).
 """
 from __future__ import annotations
 
+import json
 import time
 
 import numpy as np
 
 from repro.data.graph500 import graph500_triples
 from repro.db import EdgeSchema, NaiveTable, dbsetup
+from repro.db.kvstore import ShardedTable
 
 
 def build_graph(scale: int = 13, ingestors: int = 8, use_pallas: bool = False):
@@ -75,5 +82,89 @@ def fig4(scale: int = 13, degrees=(1, 10, 100, 1000), reps: int = 5):
     return rows
 
 
+def _build_lsm_serving_state(n_l0_runs: int, with_levels: bool,
+                             shards: int = 2, mem: int = 4096,
+                             tail: int = 256, seed: int = 0):
+    """An LSM table in point-read serving shape: ``n_l0_runs`` resident L0
+    runs (plus two leveled runs when ``with_levels``) and a small unflushed
+    memtable tail. Key ranges overlap across runs so blooms mostly hit —
+    the per-run baseline gets no cheap range-skips."""
+    st = ShardedTable("qbench", num_shards=shards,
+                      capacity_per_shard=1 << 18, batch_cap=mem,
+                      id_capacity=1 << 22, memtable_cap=mem,
+                      l0_slots=max(8, n_l0_runs + 2), engine="lsm")
+    rng = np.random.default_rng(seed)
+
+    def fill(n):
+        st.insert(rng.integers(0, 1 << 22, n).astype(np.int32),
+                  rng.integers(0, 1 << 10, n).astype(np.int32),
+                  rng.normal(size=n).astype(np.float32))
+
+    if with_levels:
+        for _ in range(16):  # two L0 fills -> auto-majors land in L2
+            fill(mem)
+            st.flush()
+        fill(mem)            # small merge -> resident L1 as well
+        st.flush()
+        st.major_compact()
+    for _ in range(n_l0_runs):
+        fill(mem)
+        st.flush()
+    fill(tail)              # unflushed memtable tail
+    return st
+
+
+def fused_read_compare(reps: int = 100, q_rows: int = 4,
+                       out: str = None) -> dict:
+    """Point-read latency A/B: fused single-dispatch vs per-run baseline,
+    sweeping resident runs per shard (fig4 SVR-shaped tiny queries, where
+    the per-run path is dispatch-bound). Writes ``BENCH_query.json``."""
+    rng = np.random.default_rng(3)
+    result = {"config": {"reps": reps, "q_rows": q_rows}, "rows": []}
+    scenarios = [(2, False), (4, False), (6, False), (2, True)]
+    for n_l0, with_levels in scenarios:
+        st = _build_lsm_serving_state(n_l0, with_levels)
+        resident = max(st._runs.resident_runs(s) for s in range(st.S))
+        present = np.asarray(st.scan_shard(0)[0])
+        qs = [np.unique(rng.choice(present, q_rows)).astype(np.int32)
+              for _ in range(8)]
+        timings = {}
+        for mode, fused in (("fused", True), ("per_run", False)):
+            st.fused_reads = fused
+            for q in qs:
+                st.query_rows(q)  # warm both jit caches off the clock
+            t0 = time.time()
+            for i in range(reps):
+                st.query_rows(qs[i % len(qs)])
+            timings[mode] = (time.time() - t0) / reps * 1e6
+        st.fused_reads = True
+        row = {"resident_runs_per_shard": resident,
+               "with_levels": with_levels,
+               "fused_us_per_query": timings["fused"],
+               "per_run_us_per_query": timings["per_run"],
+               "fused_speedup": timings["per_run"] / timings["fused"],
+               "fused_dispatches": st.engine_stats()["fused_dispatches"]}
+        result["rows"].append(row)
+        print(f"runs/shard={resident:2d} levels={with_levels} "
+              f"fused={timings['fused']:8.1f}us "
+              f"per-run={timings['per_run']:8.1f}us "
+              f"speedup={row['fused_speedup']:.2f}x")
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {out}")
+    return result
+
+
 if __name__ == "__main__":
-    fig4()
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fused-compare", action="store_true",
+                    help="read-path A/B only (BENCH_query.json artifact)")
+    ap.add_argument("--out", default="BENCH_query.json")
+    ap.add_argument("--reps", type=int, default=100)
+    args = ap.parse_args()
+    if args.fused_compare:
+        fused_read_compare(reps=args.reps, out=args.out)
+    else:
+        fig4()

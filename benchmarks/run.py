@@ -104,6 +104,23 @@ def bench_fig4_query(full: bool) -> None:
              engine="lsm", entries_per_s=r["opt_edges_per_s"])
 
 
+# ------------------------------------- fused vs per-run LSM point reads
+def bench_query_fused(full: bool) -> None:
+    """Read-path A/B: the fused single-dispatch query vs one bloom-gated
+    launch per resident run. Also writes the BENCH_query.json artifact."""
+    from .query_bench import fused_read_compare
+    res = fused_read_compare(reps=200 if full else 100,
+                             out="BENCH_query.json")
+    for r in res["rows"]:
+        tag = "lvl" if r["with_levels"] else "l0"
+        emit(f"query_fused_{tag}_runs{r['resident_runs_per_shard']}",
+             r["fused_us_per_query"],
+             f"{r['fused_speedup']:.2f}x vs per-run "
+             f"({r['per_run_us_per_query']:.0f}us)",
+             engine="lsm", shards=2,
+             fused_speedup=r["fused_speedup"])
+
+
 # ------------------------------------------- DB micro (compiled paths)
 def bench_db_micro(full: bool) -> None:
     from repro.db.kvstore import ShardedTable
@@ -167,6 +184,7 @@ def main() -> None:
         "fig3_straggler": bench_fig3_straggler,
         "engine": bench_engine_compare,
         "fig4": bench_fig4_query,
+        "query_fused": bench_query_fused,
         "db_micro": bench_db_micro,
         "roofline": bench_roofline_summary,
     }

@@ -66,6 +66,19 @@ class StringDict:
     def get(self, s: str) -> int:
         return self._to_id.get(s, -1)
 
+    @classmethod
+    def from_strings(cls, strings) -> "StringDict":
+        """Rebuild with ids assigned by POSITION (id i = strings[i]).
+
+        The ``__init__`` path interns via ``encode`` — which dedups through
+        ``np.unique`` and therefore assigns ids in *sorted* order. Recovery
+        must preserve the original allocation order, so it uses this.
+        """
+        d = cls()
+        d._to_str = list(strings)
+        d._to_id = {s: i for i, s in enumerate(d._to_str)}
+        return d
+
     # -- persistence (checkpoint manifest / restart path) -------------------
     def save(self, path: str) -> None:
         tmp = path + ".tmp"
@@ -76,8 +89,4 @@ class StringDict:
     @classmethod
     def load(cls, path: str) -> "StringDict":
         with open(path) as f:
-            strs = json.load(f)
-        d = cls()
-        d._to_str = list(strs)
-        d._to_id = {s: i for i, s in enumerate(d._to_str)}
-        return d
+            return cls.from_strings(json.load(f))

@@ -2,7 +2,8 @@
 # store + the paper's Listing-1 connector API + D4M 2.0 schema.
 # Storage engines: db.lsm (leveled runs, default) | legacy single-run tablet.
 # See src/repro/db/README.md for the storage architecture.
-from .connector import DBserver, Table, TablePair, dbinit, dbsetup, delete, put, putTriple
+from .connector import (DBserver, Table, TablePair, dbinit, dbsetup, delete,
+                        put, putTriple, recover_connector)
 from .schema import DegreeTable, EdgeSchema
 from .naive import NaiveTable
 from . import graphulo
@@ -10,6 +11,6 @@ from . import lsm
 
 __all__ = [
     "DBserver", "Table", "TablePair", "dbinit", "dbsetup", "delete", "put",
-    "putTriple", "DegreeTable", "EdgeSchema", "NaiveTable", "graphulo",
-    "lsm",
+    "putTriple", "recover_connector", "DegreeTable", "EdgeSchema",
+    "NaiveTable", "graphulo", "lsm",
 ]

@@ -15,6 +15,8 @@ sharding behind the *same* API (DESIGN §2).
 """
 from __future__ import annotations
 
+import json
+import os
 from typing import Optional, Tuple, Union
 
 import numpy as np
@@ -25,6 +27,73 @@ from . import batching
 from .kvstore import ShardedTable
 
 _INITIALIZED = False
+
+
+# ---------------------------------------------------------------------------
+# String-dictionary durability (ROADMAP "dictionary durability"): the WAL
+# journals encoded int triples, so recovering *string-keyed* queries needs
+# the dictionaries too. Each dict persists as a checkpoint snapshot
+# (<stem>.json, the whole id->string list) plus an append-only journal
+# (<stem>.log, one JSON line per newly interned string, flushed before the
+# triple batch that uses those ids reaches the triple WAL). Recovery loads
+# the snapshot and replays the journal suffix; a torn last line is
+# discarded — its ids can never appear in the triple WAL, which is always
+# flushed after the dict journal.
+# ---------------------------------------------------------------------------
+def _dict_paths(dirpath: str, stem: str) -> Tuple[str, str]:
+    return (os.path.join(dirpath, stem + ".json"),
+            os.path.join(dirpath, stem + ".log"))
+
+
+def _load_dict(dirpath: str, stem: str) -> StringDict:
+    """Rebuild a StringDict from its checkpoint + journal suffix."""
+    jpath, lpath = _dict_paths(dirpath, stem)
+    strs = []
+    if os.path.exists(jpath):
+        with open(jpath) as f:
+            strs = json.load(f)
+    seen = set(strs)
+    if os.path.exists(lpath):
+        with open(lpath, encoding="utf-8") as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    s = json.loads(line)
+                except json.JSONDecodeError:
+                    break  # torn tail from a crash mid-append
+                # a crash BETWEEN checkpoint's snapshot write and its
+                # journal reset leaves journal lines the snapshot already
+                # holds; appends are strictly-new strings in id order, so
+                # membership dedup restores the exact id positions
+                if s not in seen:
+                    strs.append(s)
+                    seen.add(s)
+    return StringDict.from_strings(strs)
+
+
+class _DictJournal:
+    """Open append handle for one dictionary's .log file."""
+
+    def __init__(self, dirpath: str, stem: str):
+        self.jpath, self.lpath = _dict_paths(dirpath, stem)
+        self._f = open(self.lpath, "a", encoding="utf-8")
+
+    def append(self, strings) -> None:
+        for s in strings:
+            self._f.write(json.dumps(s) + "\n")
+        self._f.flush()
+
+    def checkpoint(self, d: StringDict) -> None:
+        """Snapshot the whole dict and reset the journal (compaction)."""
+        d.save(self.jpath)
+        self._f.close()
+        self._f = open(self.lpath, "w", encoding="utf-8")
+        self._f.flush()
+
+    def close(self) -> None:
+        self._f.close()
 
 
 def dbinit() -> None:
@@ -53,8 +122,12 @@ class DBserver:
                  char_budget: int = batching.DEFAULT_CHAR_BUDGET,
                  use_pallas: bool = False,  # True = TPU kernels (interpret
                  # mode on CPU is validation-only; XLA path is the CPU path)
-                 engine: str = "lsm"):  # storage engine: "lsm" (leveled
+                 engine: str = "lsm",  # storage engine: "lsm" (leveled
                  # runs, db/lsm) or "single" (legacy one-run tablet)
+                 fused_reads: bool = True,  # LSM point reads in one dispatch
+                 wal_root: str = None):  # durability root: each table logs
+                 # to <wal_root>/<table>/, the shared key dictionary to
+                 # <wal_root>/keydict.{json,log}
         assert num_shards * id_capacity < 2 ** 31, "id space must fit int32 routing"
         self.instance = instance
         self.num_shards = num_shards
@@ -64,9 +137,23 @@ class DBserver:
         self.char_budget = char_budget
         self.use_pallas = use_pallas
         self.engine = engine
+        self.fused_reads = fused_reads
         self.keydict = StringDict()          # shared row/col key universe
         self._sorted_keys: Optional[np.ndarray] = None
         self.tables: dict = {}
+        self.wal_root: Optional[str] = None
+        self._keydict_journal: Optional[_DictJournal] = None
+        if wal_root is not None:
+            self.attach_wal_root(wal_root)
+
+    def attach_wal_root(self, wal_root: str) -> None:
+        """Enable durability under ``wal_root``. Call AFTER loading any
+        pre-existing dictionary state (recover_connector does)."""
+        os.makedirs(wal_root, exist_ok=True)
+        if self._keydict_journal is not None:
+            self._keydict_journal.close()
+        self.wal_root = wal_root
+        self._keydict_journal = _DictJournal(wal_root, "keydict")
 
     # ------------------------------------------------------------- binding
     def __getitem__(self, names: Union[str, Tuple[str, str]]):
@@ -88,11 +175,22 @@ class DBserver:
 
     # ----------------------------------------------------- key resolution
     def encode_keys(self, strs: np.ndarray) -> np.ndarray:
+        before = len(self.keydict)
         ids = self.keydict.encode(strs)
         if ids.size and ids.max() >= self.id_capacity:
             raise OverflowError("key universe exceeded id_capacity")
+        if self._keydict_journal is not None and len(self.keydict) > before:
+            # journal newly interned strings (in id order) BEFORE any
+            # triple using those ids can reach a table WAL
+            self._keydict_journal.append(self.keydict._to_str[before:])
         self._sorted_keys = None  # invalidate range-query snapshot
         return ids
+
+    def checkpoint_keydict(self) -> None:
+        """Snapshot the shared key dictionary + reset its journal."""
+        if self._keydict_journal is None:
+            raise ValueError("checkpoint_keydict() needs a wal_root")
+        self._keydict_journal.checkpoint(self.keydict)
 
     def _snapshot(self):
         if self._sorted_keys is None or len(self._sorted_keys) != len(self.keydict):
@@ -140,14 +238,48 @@ class Table:
     def __init__(self, server: DBserver, name: str, combiner: str = "last"):
         self.server = server
         self.name = name
+        wal_dir = (os.path.join(server.wal_root, name)
+                   if getattr(server, "wal_root", None) else None)
         self.store = ShardedTable(
             name, num_shards=server.num_shards,
             capacity_per_shard=server.capacity_per_shard,
             batch_cap=server.batch_cap, id_capacity=server.id_capacity,
             combiner=combiner, use_pallas=server.use_pallas,
-            engine=getattr(server, "engine", "lsm"))
+            engine=getattr(server, "engine", "lsm"),
+            fused_reads=getattr(server, "fused_reads", True),
+            wal_dir=wal_dir)
         self.valdict: Optional[StringDict] = None  # set on first string put
+        self._valdict_journal: Optional[_DictJournal] = None
         self._deleted = False
+
+    @classmethod
+    def _from_store(cls, server: DBserver, name: str, store: ShardedTable,
+                    valdict: Optional[StringDict] = None) -> "Table":
+        """Bind a recovered store (recover_connector) without creating a
+        fresh one; registers the table on the server."""
+        t = object.__new__(cls)
+        t.server = server
+        t.name = name
+        t.store = store
+        t.valdict = valdict
+        t._valdict_journal = None
+        t._deleted = False
+        if valdict is not None and store._wal_dir is not None:
+            t._valdict_journal = _DictJournal(store._wal_dir, "valdict")
+        server.tables[name] = t
+        return t
+
+    def checkpoint(self) -> str:
+        """Durability point: snapshot the store's runs AND the string
+        dictionaries, so ``recover_connector`` restores string-keyed
+        queries — not just the encoded int store. Returns the manifest
+        path."""
+        self._check_live()
+        path = self.store.checkpoint()
+        self.server.checkpoint_keydict()
+        if self._valdict_journal is not None and self.valdict is not None:
+            self._valdict_journal.checkpoint(self.valdict)
+        return path
 
     def _check_live(self) -> None:
         if self._deleted:
@@ -180,7 +312,15 @@ class Table:
             if bv.dtype.kind in "OUS":
                 if self.valdict is None:
                     self.valdict = StringDict()
+                    if self.store._wal_dir is not None:
+                        self._valdict_journal = _DictJournal(
+                            self.store._wal_dir, "valdict")
+                before = len(self.valdict)
                 val = self.valdict.encode(bv.astype(object)).astype(np.float32) + 1.0
+                if (self._valdict_journal is not None
+                        and len(self.valdict) > before):
+                    self._valdict_journal.append(
+                        self.valdict._to_str[before:])
             else:
                 val = bv.astype(np.float32)
             self.store.insert(rid, cid, val)
@@ -254,6 +394,42 @@ def put(table, a: Assoc) -> None:
 
 def putTriple(table, rows, cols, vals) -> None:
     table.put_triple(rows, cols, vals)
+
+
+def recover_connector(wal_root: str, name: str,
+                      instance: str = "recovered"):
+    """Rebuild a connector-level (string-keyed) table after a crash.
+
+    Loads the shared key dictionary (checkpoint snapshot + journal suffix)
+    and the table's value dictionary from ``wal_root``, recovers the
+    encoded store via ``db.lsm.recover``, and binds a live ``Table`` on a
+    fresh ``DBserver`` — so ``T["a,", :]`` works again, not just raw id
+    queries. Returns ``(server, table)``; both keep journaling to the same
+    ``wal_root``.
+    """
+    from .lsm.manifest import MANIFEST
+    from .lsm.manifest import recover as recover_store
+
+    table_dir = os.path.join(wal_root, name)
+    with open(os.path.join(table_dir, MANIFEST)) as f:
+        man = json.load(f)
+    cfg = man["config"]
+    server = DBserver(instance, num_shards=cfg["num_shards"],
+                      capacity_per_shard=cfg["capacity_per_shard"],
+                      batch_cap=cfg["batch_cap"],
+                      id_capacity=cfg["id_capacity"],
+                      use_pallas=cfg["use_pallas"], engine="lsm")
+    # dictionary state must load BEFORE the journal re-opens for append
+    server.keydict = _load_dict(wal_root, "keydict")
+    server.attach_wal_root(wal_root)
+    store = recover_store(table_dir)
+    valdict = None
+    if any(os.path.exists(p) for p in _dict_paths(table_dir, "valdict")):
+        valdict = _load_dict(table_dir, "valdict")
+        if len(valdict) == 0:
+            valdict = None
+    table = Table._from_store(server, name, store, valdict)
+    return server, table
 
 
 def delete(table) -> None:

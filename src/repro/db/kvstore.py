@@ -242,7 +242,9 @@ class ShardedTable:
                  id_capacity: int = 1 << 22, combiner: str = "last",
                  use_pallas: bool = False, memtable_cap: int = None,
                  engine: str = "lsm", l0_slots: int = 4, fanout: int = 4,
-                 wal_dir: str = None):
+                 wal_dir: str = None, fused_reads: bool = True,
+                 fused_q_limit: int = 512, bloom_bits_per_key=None,
+                 bloom_hashes=None):
         # use_pallas=True runs the TPU kernels (interpret-mode on CPU — for
         # validation only; the XLA path is the CPU-performance path)
         assert combiner in COMBINERS
@@ -256,14 +258,26 @@ class ShardedTable:
         self.id_capacity = id_capacity
         self.combiner = combiner
         self.use_pallas = use_pallas
+        # fused_reads: serve LSM point queries via the single-dispatch
+        # fused path (db.lsm.engine.query_shard_fused); batches larger
+        # than fused_q_limit fall back to the per-run path, whose cost is
+        # bandwidth- not dispatch-bound at that size.
+        self.fused_reads = fused_reads
+        self.fused_q_limit = fused_q_limit
         self.mem_cap = memtable_cap or max(batch_cap * 4,
                                            min(capacity_per_shard, 1 << 18))
         self._closed = False
         if engine == "lsm":
+            from .lsm.bloom import BITS_PER_KEY, NUM_HASHES
             from .lsm.engine import LSMRuns
-            self._runs = LSMRuns(num_shards, capacity_per_shard,
-                                 self.mem_cap, combiner, use_pallas,
-                                 l0_slots=l0_slots, fanout=fanout)
+            self._runs = LSMRuns(
+                num_shards, capacity_per_shard, self.mem_cap, combiner,
+                use_pallas, l0_slots=l0_slots, fanout=fanout,
+                bloom_bits_per_key=(BITS_PER_KEY if bloom_bits_per_key is None
+                                    else bloom_bits_per_key),
+                bloom_hashes=(NUM_HASHES if bloom_hashes is None
+                              else bloom_hashes),
+                id_capacity=id_capacity)
             self.tablets = None
         else:
             self._runs = None
@@ -279,6 +293,10 @@ class ShardedTable:
         # bypasses the host, which invalidates the mirror until next flush.
         self._mem_mirror = [[] for _ in range(num_shards)]
         self._mirror_ok = True
+        # (row, col)-sorted + combiner-deduped mirror per shard, computed
+        # lazily for the fused read path (saves an in-dispatch sort) and
+        # reused until the next insert touches the shard
+        self._mem_sorted: dict = {}
         self._insert = _vmapped_insert(combiner, use_pallas)
         self._append = _APPEND
         self._append_flat = _APPEND_FLAT
@@ -405,6 +423,7 @@ class ShardedTable:
                 self._mem_mirror[s].append(
                     (rows[starts_m[s]:ends[s]], cols[starts_m[s]:ends[s]],
                      vals[starts_m[s]:ends[s]]))
+                self._mem_sorted.pop(int(s), None)
         slot = np.arange(n, dtype=np.int32) - (ends - counts_b)[dest]
         pad = (1 << max(n - 1, 1).bit_length()) - n  # bucket jit shapes
         if pad:
@@ -459,6 +478,7 @@ class ShardedTable:
         self._mem_n = np.zeros((self.S,), np.int64)
         self._mem_mirror = [[] for _ in range(self.S)]
         self._mirror_ok = True
+        self._mem_sorted.clear()
 
     def _mem_host(self, s: int):
         """Host mirror of shard ``s``'s memtable, or None if stale."""
@@ -469,6 +489,25 @@ class ShardedTable:
                     np.zeros(0, np.float32))
         return tuple(np.concatenate([b[i] for b in self._mem_mirror[s]])
                      for i in range(3))
+
+    def _mem_host_sorted(self, s: int):
+        """The mirror, (row, col)-sorted and pre-combined for the fused
+        read path (commutes with the cross-run combine, exactly like a
+        flush would); cached until the next insert touches the shard."""
+        got = self._mem_sorted.get(s)
+        if got is not None:
+            return got
+        mh = self._mem_host(s)
+        if mh is None or len(mh[0]) == 0:
+            return mh
+        from .lsm.engine import combine_triples
+        got = combine_triples(mh[0].astype(np.int32),
+                              mh[1].astype(np.int32),
+                              mh[2].astype(np.float32),
+                              np.arange(len(mh[0]), dtype=np.int32),
+                              self.combiner)
+        self._mem_sorted[s] = got
+        return got
 
     def major_compact(self) -> None:
         """Force a major compaction (LSM): flush, then merge all runs."""
@@ -499,12 +538,30 @@ class ShardedTable:
                 uq, ucnt = np.unique(q, return_counts=True)
                 mem_n = int(self._mem_n[s])
                 mh = self._mem_host(int(s))
-                if mh is None and mem_n:  # mirror stale: pull device bufs
-                    mem = (self._mem_r[s], self._mem_c[s], self._mem_v[s])
+                if self.fused_reads and len(uq) <= self.fused_q_limit:
+                    mem_sorted = False
+                    if mem_n == 0:
+                        fmem = None
+                    elif mh is not None:
+                        fmem = self._mem_host_sorted(int(s))
+                        mem_sorted = True
+                    else:  # mirror stale: slice device buffers (lazy)
+                        fmem = (self._mem_r[s, :mem_n],
+                                self._mem_c[s, :mem_n],
+                                self._mem_v[s, :mem_n])
+                    if fmem is None and not self._runs.resident_runs(int(s)):
+                        continue  # empty shard: nothing to dispatch
+                    r, c, v = self._runs.query_shard_fused(
+                        int(s), uq, mem_host=fmem, max_return=max_return,
+                        mem_sorted=mem_sorted)
                 else:
-                    mem = (None, None, None)
-                r, c, v = self._runs.query_shard(
-                    int(s), uq, *mem, mem_n, max_return, mem_host=mh)
+                    if mh is None and mem_n:  # stale: pull device bufs
+                        mem = (self._mem_r[s], self._mem_c[s],
+                               self._mem_v[s])
+                    else:
+                        mem = (None, None, None)
+                    r, c, v = self._runs.query_shard(
+                        int(s), uq, *mem, mem_n, max_return, mem_host=mh)
                 if len(r) and (ucnt > 1).any():
                     rep = ucnt[np.searchsorted(uq, r)]
                     r, c, v = (np.repeat(r, rep), np.repeat(c, rep),

@@ -1,12 +1,18 @@
-# LSM storage engine: leveled sorted runs + bloom/fence read path + WAL.
-# Wired under ShardedTable(engine="lsm"); see src/repro/db/README.md.
-from .bloom import bloom_build, bloom_maybe_contains, fence_build
-from .engine import LSMRuns, combine_triples, plan_levels, run_query_rows
+# LSM storage engine: leveled sorted runs + fused single-dispatch reads
+# (bloom/fence gated) + WAL. Wired under ShardedTable(engine="lsm");
+# see src/repro/db/README.md.
+from .bloom import (bloom_build, bloom_maybe_contains,
+                    bloom_maybe_contains_batch, fence_build, num_words,
+                    suggest_hashes, theoretical_fp_rate)
+from .engine import (LSMRuns, combine_triples, plan_levels,
+                     run_query_gated, run_query_rows)
 from .manifest import recover, wal_path, write_snapshot
 from .wal import WriteAheadLog
 
 __all__ = [
     "LSMRuns", "WriteAheadLog", "bloom_build", "bloom_maybe_contains",
-    "combine_triples", "fence_build", "plan_levels", "recover",
-    "run_query_rows", "wal_path", "write_snapshot",
+    "bloom_maybe_contains_batch", "combine_triples", "fence_build",
+    "num_words", "plan_levels", "recover", "run_query_gated",
+    "run_query_rows", "suggest_hashes", "theoretical_fp_rate", "wal_path",
+    "write_snapshot",
 ]

@@ -7,13 +7,18 @@ probe are pure jnp: k multiplicative xor-shift hashes, a boolean scatter
 (collision-safe, unlike packed-word adds), then a pack to uint32 words so
 the resident state is bits/8 bytes per key.
 
-Sizing: ``BITS_PER_KEY`` = 8 with ``NUM_HASHES`` = 4 gives ~2.4% false
-positives at full occupancy — each false positive costs one needless rank
+Sizing is per run: ``bits_per_key`` and ``n_hashes`` are exposed so deep
+levels (which absorb most negative lookups) can carry denser filters than
+L0 runs (ROADMAP "Bloom sizing"). The defaults — 8 bits/key, 4 hashes —
+give ~2.4% false positives at full occupancy; the theoretical rate for a
+filter of m bits, n keys, k hashes is ``(1 - exp(-k*n/m))**k``
+(``theoretical_fp_rate``). A false positive costs one needless rank
 search, never a wrong result.
 """
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -23,15 +28,32 @@ from ...kernels.common import I32_MAX
 NUM_HASHES = 4
 BITS_PER_KEY = 8
 
-# odd 32-bit constants (xxhash/murmur finalizer family)
-_MULTS = (0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F)
+# odd 32-bit constants (xxhash/murmur finalizer family); len() bounds the
+# largest usable n_hashes
+_MULTS = (0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F,
+          0x165667B1, 0xD6E8FEB9, 0xCC9E2D51, 0x1B873593)
+
+MAX_HASHES = len(_MULTS)
 
 
-def num_words(run_capacity: int) -> int:
+def num_words(run_capacity: int, bits_per_key: int = BITS_PER_KEY) -> int:
     """uint32 words for a run of ``run_capacity`` keys (pow2, >= 2)."""
-    bits = max(64, run_capacity * BITS_PER_KEY)
+    bits = max(64, run_capacity * bits_per_key)
     bits = 1 << (bits - 1).bit_length()
     return bits // 32
+
+
+def theoretical_fp_rate(n_keys: int, n_words: int, n_hashes: int) -> float:
+    """Classic bloom bound: (1 - e^{-kn/m})^k for m = 32 * n_words bits."""
+    if n_keys == 0:
+        return 0.0
+    m = 32 * n_words
+    return (1.0 - math.exp(-n_hashes * n_keys / m)) ** n_hashes
+
+
+def suggest_hashes(bits_per_key: int) -> int:
+    """fp-optimal hash count k = ln2 * bits/key, clamped to _MULTS."""
+    return max(1, min(MAX_HASHES, round(math.log(2) * bits_per_key)))
 
 
 def _hash(keys: jax.Array, mult: int, n_bits: int) -> jax.Array:
@@ -43,8 +65,9 @@ def _hash(keys: jax.Array, mult: int, n_bits: int) -> jax.Array:
     return (h & jnp.uint32(n_bits - 1)).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("n_words",))
-def bloom_build(rows: jax.Array, n_words: int) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("n_words", "n_hashes"))
+def bloom_build(rows: jax.Array, n_words: int,
+                n_hashes: int = NUM_HASHES) -> jax.Array:
     """Build a packed filter over the valid (!= I32_MAX) row ids.
 
     Scatters into a boolean bitset first (set() is idempotent, so same-word
@@ -53,7 +76,7 @@ def bloom_build(rows: jax.Array, n_words: int) -> jax.Array:
     n_bits = n_words * 32
     valid = rows != I32_MAX
     bits = jnp.zeros((n_bits,), jnp.bool_)
-    for mult in _MULTS[:NUM_HASHES]:
+    for mult in _MULTS[:n_hashes]:
         idx = jnp.where(valid, _hash(rows, mult, n_bits), n_bits)
         bits = bits.at[idx].set(True, mode="drop")
     weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
@@ -61,14 +84,29 @@ def bloom_build(rows: jax.Array, n_words: int) -> jax.Array:
         axis=1, dtype=jnp.uint32)
 
 
-@jax.jit
-def bloom_maybe_contains(words: jax.Array, q: jax.Array) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("n_hashes",))
+def bloom_maybe_contains(words: jax.Array, q: jax.Array,
+                         n_hashes: int = NUM_HASHES) -> jax.Array:
     """bool[Q]: False guarantees the row is absent from the run."""
     n_bits = words.shape[-1] * 32
     hit = jnp.ones(q.shape, jnp.bool_)
-    for mult in _MULTS[:NUM_HASHES]:
+    for mult in _MULTS[:n_hashes]:
         h = _hash(q, mult, n_bits)
         bit = (words[..., h >> 5] >> (h & 31).astype(jnp.uint32)) & 1
+        hit = hit & (bit == 1)
+    return hit
+
+
+def bloom_maybe_contains_batch(words: jax.Array, q: jax.Array,
+                               n_hashes: int = NUM_HASHES) -> jax.Array:
+    """bool[K, Q] probe of a stacked batch of filters ``words[K, W]`` —
+    the fused read path probes every resident run of a shard inside one
+    dispatch. Not jitted standalone: callers trace it inside their own jit."""
+    n_bits = words.shape[-1] * 32
+    hit = jnp.ones((words.shape[0], q.shape[0]), jnp.bool_)
+    for mult in _MULTS[:n_hashes]:
+        h = _hash(q, mult, n_bits)                       # [Q]
+        bit = (words[:, h >> 5] >> (h & 31).astype(jnp.uint32)) & 1
         hit = hit & (bit == 1)
     return hit
 

@@ -12,12 +12,27 @@ Replaces the single-sorted-run tablet with Accumulo's actual layout:
   L1..Ld: one geometrically larger sorted run per level (static
           capacities, so every device op is jit-compatible)
 
-Each run carries a packed-uint32 bloom filter over its row ids and fence
-pointers (block-start row ids). Point reads probe runs newest→oldest,
-skipping runs by bloom/row-range, bracketing the rank search to one fence
-block — no flush required. Combiner semantics (``db.iterators``) hold
-across any flush/compaction schedule because every merge preserves age
-order within equal-key groups and every dedup applies the same combiner.
+Each run carries a packed-uint32 bloom filter over its row ids (sized per
+level — deep levels absorb most negative lookups) and fence pointers
+(block-start row ids). Combiner semantics (``db.iterators``) hold across
+any flush/compaction schedule because every merge preserves age order
+within equal-key groups and every dedup applies the same combiner.
+
+Two read paths serve point queries (neither ever flushes):
+
+* **fused** (default, ``query_shard_fused``): the entire shard — every
+  leveled run, the whole L0 stack, and the memtable tail — is searched by
+  ONE jitted dispatch. Runs keep their static stacked shapes (levels are
+  distinct-capacity buckets, L0 is already a [K0, m] batch; empty slots
+  are inert I32_MAX padding, so no re-bucketing is ever needed), the
+  bloom-gated fence-bracketed rank search is vmapped across runs, and the
+  cross-run age-ordered combine happens on-device: one dispatch, one host
+  sync, regardless of how many runs are resident.
+* **per-run** (``query_shard``): one bloom-gated kernel launch per
+  resident run, combined on the host. Kept as the A/B baseline and used
+  for very large query batches, where the fused on-device combine's
+  [Q, runs*max_return] sort would dominate (reads there are
+  bandwidth-bound, not dispatch-bound).
 
 All state is stacked [S, ...] across shards; flushes and compactions are
 vmapped so the S simulated tablet servers advance in lockstep (one hot
@@ -26,7 +41,7 @@ shard compacts its peers early — harmless, entries just move down a level).
 from __future__ import annotations
 
 import functools
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +49,10 @@ import numpy as np
 
 from ...kernels.common import I32_MAX, INTERPRET
 from ...kernels.merge_rank import kway_merge
-from .bloom import bloom_build, bloom_maybe_contains, fence_build, num_words
+from ...kernels.sorted_search import sorted_search_batched
+from .bloom import (BITS_PER_KEY, MAX_HASHES, NUM_HASHES, bloom_build,
+                    bloom_maybe_contains, bloom_maybe_contains_batch,
+                    fence_build, num_words)
 
 
 def fence_block(cap: int) -> int:
@@ -58,6 +76,24 @@ def plan_levels(capacity_per_shard: int, mem_cap: int, l0_slots: int,
     return caps
 
 
+def _per_level(spec: Union[int, Sequence[int]], n_levels: int) -> Tuple[int, ...]:
+    """Expand a scalar-or-sequence sizing spec to one value per level.
+
+    A sequence shorter than the level count repeats its last entry for the
+    deeper levels (so ``(8, 12, 16)`` means: L1 8 bits, L2 12, L3+ 16)."""
+    if isinstance(spec, (int, np.integer)):
+        return (int(spec),) * n_levels
+    spec = tuple(int(x) for x in spec)
+    if not spec:
+        raise ValueError("empty bloom sizing spec")
+    return tuple(spec[min(i, len(spec) - 1)] for i in range(n_levels))
+
+
+def _bucket(n: int, lo: int = 8) -> int:
+    """Next pow2 >= max(n, lo): static jit shapes for ragged host inputs."""
+    return 1 << (max(n, lo) - 1).bit_length()
+
+
 # ---------------------------------------------------------------- device ops
 def _sort_dedup(r, c, v, combiner: str):
     """Sort one buffer lex by (row, col) (stable → age order kept), apply
@@ -79,16 +115,26 @@ def _sort_dedup(r, c, v, combiner: str):
 
 
 @functools.lru_cache(maxsize=None)
-def _flush_fn(combiner: str, n_words: int, block: int):
+def _flush_fn(combiner: str, n_words: int, block: int, n_hashes: int):
     """jit(vmap): memtable [S, m] -> one sorted+deduped L0 run per shard,
     with bloom + fence metadata. Cost O(m log m) per shard."""
 
     def one(r, c, v):
         rr, cc, vv, n = _sort_dedup(r, c, v, combiner)
-        return (rr, cc, vv, n, bloom_build(rr, n_words),
+        return (rr, cc, vv, n, bloom_build(rr, n_words, n_hashes),
                 fence_build(rr, block), rr[0], rr[jnp.maximum(n - 1, 0)])
 
     return jax.jit(jax.vmap(one))
+
+
+@functools.lru_cache(maxsize=None)
+def _bloom_rebuild_fn(n_words: int, n_hashes: int, nested: bool):
+    """jit: rebuild blooms for stacked runs on snapshot load — cached at
+    module level so repeated ``recover()`` calls (crash-fuzz loops, test
+    suites) reuse the compiled graph instead of re-tracing per call."""
+    one = functools.partial(bloom_build, n_words=n_words, n_hashes=n_hashes)
+    f = jax.vmap(jax.vmap(one)) if nested else jax.vmap(one)
+    return jax.jit(f)
 
 
 @functools.lru_cache(maxsize=None)
@@ -105,7 +151,7 @@ def _write_slot_fn():
 
 @functools.lru_cache(maxsize=None)
 def _compact_fn(combiner: str, use_pallas: bool, out_cap: int, n_words: int,
-                block: int):
+                block: int, n_hashes: int):
     """jit(vmap): k-way merge L0 runs + levels 1..d into level d.
 
     Inputs per shard: l0 [K0, m] plus a tuple of level runs ordered
@@ -126,7 +172,7 @@ def _compact_fn(combiner: str, use_pallas: bool, out_cap: int, n_words: int,
         cc = jnp.full((out_cap,), I32_MAX, jnp.int32).at[idx].set(mc, mode="drop")
         vv = jnp.zeros((out_cap,), jnp.float32).at[idx].set(out_v, mode="drop")
         n = keep.sum().astype(jnp.int32)
-        return (rr, cc, vv, n, bloom_build(rr, n_words),
+        return (rr, cc, vv, n, bloom_build(rr, n_words, n_hashes),
                 fence_build(rr, block), rr[0], rr[jnp.maximum(n - 1, 0)])
 
     return jax.jit(jax.vmap(one, in_axes=(0, 0, 0, 0)))
@@ -159,16 +205,16 @@ def run_query_rows(rows, cols, vals, fence, q, max_return: int, block: int):
     return cols[idxc], vals[idxc], ok, end - start
 
 
-@functools.partial(jax.jit, static_argnames=("max_return", "block"))
+@functools.partial(jax.jit, static_argnames=("max_return", "block", "n_hashes"))
 def run_query_gated(rows, cols, vals, fence, bloom, q, max_return: int,
-                    block: int):
+                    block: int, n_hashes: int = NUM_HASHES):
     """Bloom-gated run query in ONE dispatch: probe the bloom filter and,
     only when some queried row may be present (lax.cond — the search branch
     is genuinely skipped otherwise), run the fence-bracketed rank search.
-    Returns (any_hit, cols, vals, ok, counts). Launch these for every run
-    back-to-back and sync once — the read path costs one round-trip, not
-    one per run."""
-    any_hit = jnp.any(bloom_maybe_contains(bloom, q))
+    Returns (any_hit, cols, vals, ok, counts). The per-run baseline path
+    launches these for every run back-to-back and syncs once; the fused
+    path replaces the N launches with one."""
+    any_hit = jnp.any(bloom_maybe_contains(bloom, q, n_hashes))
 
     def probe(_):
         return run_query_rows(rows, cols, vals, fence, q, max_return, block)
@@ -181,6 +227,166 @@ def run_query_gated(rows, cols, vals, fence, bloom, q, max_return: int,
                 jnp.zeros((nq,), jnp.int32))
 
     return (any_hit,) + jax.lax.cond(any_hit, probe, skip, None)
+
+
+# ----------------------------------------------------------- fused read path
+def _probe_stack(rows, cols, vals, fences, q, max_return: int, block: int,
+                 use_pallas: bool):
+    """Fence-bracketed rank search of ``q`` against K stacked runs, traced
+    inline (callers jit). rows/cols/vals [K, cap], fences [K, nb], q [Q].
+    Returns (cols[K, Q, R], vals[K, Q, R], ok[K, Q, R], counts[K, Q]).
+
+    Under ``use_pallas`` the fence rank search runs through the batched
+    Pallas ``sorted_search`` kernel (one launch for all K fence arrays).
+    The run axis is unrolled (K is static and small): vmapping it turns
+    the per-query ``dynamic_slice`` window reads into a generic gather,
+    which XLA:CPU lowers ~16x slower — the unrolled form keeps the same
+    single dispatch with the fast slice lowering.
+    """
+    n_k, cap = rows.shape
+    w = block + 1
+    if use_pallas:
+        fl = sorted_search_batched(fences, q, "left", interpret=INTERPRET)
+        fr = sorted_search_batched(fences, q, "right", interpret=INTERPRET)
+    else:
+        fl = jnp.stack([jnp.searchsorted(fences[k], q, side="left")
+                        .astype(jnp.int32) for k in range(n_k)])
+        fr = jnp.stack([jnp.searchsorted(fences[k], q, side="right")
+                        .astype(jnp.int32) for k in range(n_k)])
+    iota = jnp.arange(max_return, dtype=jnp.int32)
+    c_o, v_o, ok_o, cnt_o = [], [], [], []
+    for k in range(n_k):
+        rws = rows[k]
+
+        def bracket(qi, fi, side):
+            base = jnp.clip(jnp.maximum(fi - 1, 0) * block, 0, cap - w)
+            win = jax.lax.dynamic_slice(rws, (base,), (w,))
+            return (base + jnp.searchsorted(win, qi, side=side)
+                    ).astype(jnp.int32)
+
+        start = jax.vmap(lambda qi, fi: bracket(qi, fi, "left"))(q, fl[k])
+        end = jax.vmap(lambda qi, fi: bracket(qi, fi, "right"))(q, fr[k])
+        idx = start[:, None] + iota[None, :]
+        idxc = jnp.clip(idx, 0, cap - 1)
+        c_o.append(cols[k][idxc])
+        v_o.append(vals[k][idxc])
+        ok_o.append(idx < end[:, None])
+        cnt_o.append(end - start)
+    return (jnp.stack(c_o), jnp.stack(v_o), jnp.stack(ok_o),
+            jnp.stack(cnt_o))
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_query_fn(combiner: str, level_blocks: Tuple[int, ...],
+                    level_hashes: Tuple[int, ...], b0: int, h0: int,
+                    max_return: int, mem_mode: str, pack: bool,
+                    use_pallas: bool):
+    """Build THE single-dispatch query: the resident leveled runs (deepest
+    first), the used L0 slots, and (optionally) the memtable tail of one
+    shard are searched and cross-run combined inside one ``jax.jit``.
+
+    Static key = resident geometry (per-level fence blocks + bloom hash
+    counts) x (max_return, mem_mode, pack, use_pallas); array shapes
+    (level caps, used slots, memtable bucket, query bucket) retrace under
+    the same jit. Age order: levels deepest→shallowest get ages 1..L
+    (oldest data lives deepest), L0 slots L+1..L+K0 (slot k was flushed
+    before slot k+1), the memtable L+K0+1 (newest). ``mem_mode``:
+    ``"sorted"`` = the host pre-sorted/deduped the mirror (cheap, cached
+    between inserts); ``"raw"`` = unsorted device slices, sort in-dispatch
+    (the stale-mirror SPMD path); ``"none"`` = empty.
+
+    The on-device combine sorts each query's candidates by (col, age) and
+    reduces equal-col groups with the combiner — exactly
+    ``combine_triples`` semantics, no host work. Under ``pack`` the
+    (col, age) key pair packs into ONE int32 (valid when
+    id_capacity * age_padding < 2**30), hitting XLA:CPU's fast single-key
+    sort instead of the ~10x slower multi-operand comparator sort.
+
+    Returns (cols[Q, W], vals[Q, W], keep[Q, W], cnt_max, hits[L+K0])
+    with W = n_runs * max_return; ``cnt_max`` > max_return signals the
+    host to re-dispatch wider (batch-scanner semantics), and ``hits``
+    reports per-run bloom verdicts for observability.
+    """
+    from ..kvstore import _dedup_combine
+
+    n_levels = len(level_blocks)
+
+    def fused(q, levels, l0, mem):
+        seg_cols, seg_vals, seg_ok, seg_age, cnts, hits = [], [], [], [], [], []
+        n_q = q.shape[0]
+        iota = jnp.arange(max_return, dtype=jnp.int32)
+        # leveled runs, deepest (oldest) first — ages 1..L
+        for i, (rows, cols, vals, fence, bloom) in enumerate(levels):
+            hit = bloom_maybe_contains(bloom, q, level_hashes[i])
+            c_o, v_o, ok, cnt = _probe_stack(
+                rows[None], cols[None], vals[None], fence[None], q,
+                max_return, level_blocks[i], use_pallas)
+            seg_cols.append(c_o[0])
+            seg_vals.append(v_o[0])
+            seg_ok.append(ok[0] & hit[:, None])
+            seg_age.append(i + 1)
+            cnts.append(cnt[0])
+            hits.append(jnp.any(hit))
+        # the used L0 slots — ages L+1..L+K0 (a slot empty for THIS shard
+        # while used by a peer is inert I32_MAX padding)
+        l0_rows, l0_cols, l0_vals, l0_fence, l0_bloom = l0
+        k0 = l0_rows.shape[0]
+        if k0:
+            l0_hit = bloom_maybe_contains_batch(l0_bloom, q, h0)  # [K0, Q]
+            c_o, v_o, ok, cnt = _probe_stack(l0_rows, l0_cols, l0_vals,
+                                             l0_fence, q, max_return, b0,
+                                             use_pallas)
+            ok = ok & l0_hit[:, :, None]
+            for k in range(k0):
+                seg_cols.append(c_o[k])
+                seg_vals.append(v_o[k])
+                seg_ok.append(ok[k])
+                seg_age.append(n_levels + 1 + k)
+                cnts.append(cnt[k])
+                hits.append(jnp.any(l0_hit[k]))
+        # the memtable tail (newest): one pre-combined sorted pseudo-run
+        # (intra-memtable combine commutes with the cross-run combine —
+        # flush relies on the same property)
+        if mem_mode != "none":
+            mem_r, mem_c, mem_v = mem
+            if mem_mode == "raw":
+                mem_r, mem_c, mem_v, _ = _sort_dedup(mem_r, mem_c, mem_v,
+                                                     combiner)
+            start = jnp.searchsorted(mem_r, q, side="left").astype(jnp.int32)
+            end = jnp.searchsorted(mem_r, q, side="right").astype(jnp.int32)
+            idx = start[:, None] + iota[None, :]
+            idxc = jnp.clip(idx, 0, mem_r.shape[0] - 1)
+            seg_cols.append(mem_c[idxc])
+            seg_vals.append(mem_v[idxc])
+            seg_ok.append(idx < end[:, None])
+            seg_age.append(n_levels + k0 + 1)
+            cnts.append(end - start)
+        # cross-run age-ordered combine, on-device
+        cols_all = jnp.concatenate(seg_cols, axis=1)              # [Q, W]
+        vals_all = jnp.concatenate(seg_vals, axis=1)
+        ok_all = jnp.concatenate(seg_ok, axis=1)
+        ages = jnp.concatenate(
+            [jnp.full((n_q, max_return), a, jnp.int32) for a in seg_age],
+            axis=1)
+        if pack:
+            shift = (len(seg_age) + 1).bit_length()  # ages fit below shift
+            key = jnp.where(ok_all, (cols_all << shift) + ages, I32_MAX)
+            key_s, val_s = jax.lax.sort((key, vals_all), dimension=1,
+                                        num_keys=1)
+            col_s = jnp.where(key_s == I32_MAX, I32_MAX, key_s >> shift)
+        else:
+            col_m = jnp.where(ok_all, cols_all, I32_MAX)
+            col_s, _, val_s = jax.lax.sort(
+                (col_m, ages, vals_all), dimension=1, num_keys=2)
+        keep, out_v = jax.vmap(
+            lambda r, v: _dedup_combine(r, jnp.zeros_like(r), v, combiner)
+        )(col_s, val_s)
+        cnt_max = jnp.max(jnp.stack([jnp.max(c) for c in cnts]))
+        hits_vec = (jnp.stack(hits) if hits
+                    else jnp.zeros((0,), jnp.bool_))
+        return col_s, jnp.where(keep, out_v, 0.0), keep, cnt_max, hits_vec
+
+    return jax.jit(fused)
 
 
 def combine_triples(r: np.ndarray, c: np.ndarray, v: np.ndarray,
@@ -214,23 +420,43 @@ def combine_triples(r: np.ndarray, c: np.ndarray, v: np.ndarray,
 # ------------------------------------------------------------------ engine
 class LSMRuns:
     """The leveled run structure for S shards (no memtable — that stays in
-    ``ShardedTable`` and is handed to ``flush_memtable``/read methods)."""
+    ``ShardedTable`` and is handed to ``flush_memtable``/read methods).
+
+    ``bloom_bits_per_key`` / ``bloom_hashes`` size the per-run filters:
+    scalars apply everywhere; sequences give one value per level (last
+    entry repeats for deeper levels — ROADMAP "Bloom sizing": deep levels
+    see most negative lookups, so size them denser). L0 runs always use
+    the first entry (they are small and short-lived)."""
 
     def __init__(self, num_shards: int, capacity_per_shard: int,
                  mem_cap: int, combiner: str, use_pallas: bool = False,
-                 l0_slots: int = 4, fanout: int = 4):
+                 l0_slots: int = 4, fanout: int = 4,
+                 bloom_bits_per_key: Union[int, Sequence[int]] = BITS_PER_KEY,
+                 bloom_hashes: Union[int, Sequence[int]] = NUM_HASHES,
+                 id_capacity: int = 1 << 22):
         assert mem_cap >= 8, "LSM memtable too small to index"
         self.S = num_shards
         self.cap = capacity_per_shard
         self.mem_cap = mem_cap
         self.combiner = combiner
         self.use_pallas = use_pallas
+        self.id_capacity = id_capacity  # bounds col ids: fused key packing
         self.K0 = l0_slots
         self.fanout = fanout
         self.level_caps = plan_levels(capacity_per_shard, mem_cap, l0_slots,
                                       fanout)
+        n_levels = len(self.level_caps)
+        self.bloom_bits = _per_level(bloom_bits_per_key, n_levels)
+        self.bloom_hashes = _per_level(bloom_hashes, n_levels)
+        bad = [h for h in self.bloom_hashes if not 1 <= h <= MAX_HASHES]
+        if bad:
+            # _MULTS bounds the hash family; silently clamping would make
+            # the manifest (and theoretical_fp_rate) lie about the filter
+            raise ValueError(
+                f"bloom_hashes {bad} outside [1, {MAX_HASHES}]")
         S, m, K0 = num_shards, mem_cap, l0_slots
-        self._w0 = num_words(m)
+        self._w0 = num_words(m, self.bloom_bits[0])
+        self._h0 = self.bloom_hashes[0]
         self._b0 = fence_block(m)
         nblk0 = -(-m // self._b0)
         self.l0_rows = jnp.full((S, K0, m), I32_MAX, jnp.int32)
@@ -244,10 +470,12 @@ class LSMRuns:
         self.l0_max = np.full((S, K0), -1, np.int64)
         self.l0_used = 0
         self.levels: List[dict] = []
-        for cap in self.level_caps:
-            w, b = num_words(cap), fence_block(cap)
+        for i, cap in enumerate(self.level_caps):
+            w = num_words(cap, self.bloom_bits[i])
+            b = fence_block(cap)
             self.levels.append({
                 "cap": cap, "words": w, "block": b,
+                "bits": self.bloom_bits[i], "hashes": self.bloom_hashes[i],
                 "rows": jnp.full((S, cap), I32_MAX, jnp.int32),
                 "cols": jnp.full((S, cap), I32_MAX, jnp.int32),
                 "vals": jnp.zeros((S, cap), jnp.float32),
@@ -257,11 +485,15 @@ class LSMRuns:
                 "minr": np.full((S,), I32_MAX, np.int64),
                 "maxr": np.full((S,), -1, np.int64),
             })
-        # read-path observability (tests assert blooms actually skip work)
+        # read-path observability (tests assert blooms actually skip work
+        # and that the fused path really is one dispatch per point read)
         self.stats = {"flushes": 0, "major_compactions": 0,
-                      "runs_probed": 0, "runs_skipped": 0}
+                      "runs_probed": 0, "runs_skipped": 0,
+                      "fused_dispatches": 0, "fused_widen_retries": 0}
         # per-run sliced views of the stacked arrays (slicing copies ~MBs
-        # eagerly per query otherwise); invalidated on flush/compaction
+        # eagerly per query otherwise); invalidated on flush/compaction.
+        # Fused-path entries key ("fused", s) and hold the level tuple +
+        # L0 stack views handed to the single-dispatch query.
         self._view_cache: dict = {}
 
     def warmup(self, mem_r, mem_c, mem_v) -> None:
@@ -269,7 +501,7 @@ class LSMRuns:
         them on the current (typically empty) state; results are discarded,
         so no state mutates. Keeps jit time out of benchmark windows."""
         rr, cc, vv, n, bb, ff, _, _ = _flush_fn(
-            self.combiner, self._w0, self._b0)(mem_r, mem_c, mem_v)
+            self.combiner, self._w0, self._b0, self._h0)(mem_r, mem_c, mem_v)
         _write_slot_fn()(self.l0_rows, self.l0_cols, self.l0_vals,
                          self.l0_bloom, self.l0_fence, rr, cc, vv, bb, ff,
                          jnp.asarray(0, jnp.int32))
@@ -277,7 +509,7 @@ class LSMRuns:
             lvls = tuple((self.levels[i]["rows"], self.levels[i]["cols"],
                           self.levels[i]["vals"]) for i in range(d, -1, -1))
             out = _compact_fn(self.combiner, self.use_pallas, lv["cap"],
-                              lv["words"], lv["block"])(
+                              lv["words"], lv["block"], lv["hashes"])(
                 self.l0_rows, self.l0_cols, self.l0_vals, lvls)
             jax.block_until_ready(out)
 
@@ -289,7 +521,7 @@ class LSMRuns:
         if self.l0_used == self.K0:
             self.major_compact()
         rr, cc, vv, n, bb, ff, mn, mx = _flush_fn(
-            self.combiner, self._w0, self._b0)(mem_r, mem_c, mem_v)
+            self.combiner, self._w0, self._b0, self._h0)(mem_r, mem_c, mem_v)
         (self.l0_rows, self.l0_cols, self.l0_vals, self.l0_bloom,
          self.l0_fence) = _write_slot_fn()(
             self.l0_rows, self.l0_cols, self.l0_vals, self.l0_bloom,
@@ -298,9 +530,10 @@ class LSMRuns:
         self.l0_n[:, self.l0_used] = np.asarray(n)
         self.l0_min[:, self.l0_used] = np.asarray(mn)
         self.l0_max[:, self.l0_used] = np.asarray(mx)
-        # all L0 slot views alias the re-written stacked arrays; drop them
+        # all L0 slot views (and the fused stacked views, which embed the
+        # L0 stack) alias the re-written arrays; drop them
         self._view_cache = {k: v for k, v in self._view_cache.items()
-                            if k[0] != "l0"}
+                            if k[0] not in ("l0", "fused")}
         self.l0_used += 1
         self.stats["flushes"] += 1
         if self.l0_used == self.K0:
@@ -328,7 +561,8 @@ class LSMRuns:
                       self.levels[i]["vals"]) for i in range(d, -1, -1))
         rr, cc, vv, n, bb, ff, mn, mx = _compact_fn(
             self.combiner, self.use_pallas, target["cap"], target["words"],
-            target["block"])(self.l0_rows, self.l0_cols, self.l0_vals, lvls)
+            target["block"], target["hashes"])(
+            self.l0_rows, self.l0_cols, self.l0_vals, lvls)
         n_host = np.asarray(n)
         if d == len(self.levels) - 1 and int(n_host.max()) > self.cap:
             raise OverflowError(
@@ -361,10 +595,16 @@ class LSMRuns:
         self.stats["major_compactions"] += 1
 
     # ------------------------------------------------------------ read path
+    def resident_runs(self, s: int) -> int:
+        """How many non-empty runs shard ``s`` holds (levels + L0)."""
+        n = sum(1 for lv in self.levels if lv["n"][s])
+        n += sum(1 for k in range(self.l0_used) if self.l0_n[s, k])
+        return n
+
     def _iter_runs_oldest_first(self, s: int):
-        """Yield (rows, cols, vals, fence, bloom, n, block, minr, maxr)
-        per-run views of shard ``s``, oldest (deepest level) to newest
-        (latest L0 slot)."""
+        """Yield (rows, cols, vals, fence, bloom, n, block, minr, maxr,
+        hashes) per-run views of shard ``s``, oldest (deepest level) to
+        newest (latest L0 slot)."""
         for i in range(len(self.levels) - 1, -1, -1):
             lv = self.levels[i]
             if lv["n"][s]:
@@ -375,7 +615,8 @@ class LSMRuns:
                             lv["fence"][s], lv["bloom"][s])
                     self._view_cache[key] = view
                 yield view + (int(lv["n"][s]), lv["block"],
-                              int(lv["minr"][s]), int(lv["maxr"][s]))
+                              int(lv["minr"][s]), int(lv["maxr"][s]),
+                              lv["hashes"])
         for k in range(self.l0_used):
             if self.l0_n[s, k]:
                 key = ("l0", k, s)
@@ -386,31 +627,131 @@ class LSMRuns:
                             self.l0_bloom[s, k])
                     self._view_cache[key] = view
                 yield view + (int(self.l0_n[s, k]), self._b0,
-                              int(self.l0_min[s, k]), int(self.l0_max[s, k]))
+                              int(self.l0_min[s, k]), int(self.l0_max[s, k]),
+                              self._h0)
+
+    def _fused_views(self, s: int):
+        """Per-shard stacked views for the fused dispatch: the RESIDENT
+        leveled runs (deepest first, with their static fence-block/hash
+        meta) plus the L0 stack sliced to the used slots. Restricting the
+        dispatch to resident runs is what lets it beat the per-run path —
+        probing an empty 256k-capacity level costs real gather work.
+        Residency only changes on flush/compaction, which is exactly when
+        this cache invalidates, so the slicing cost is amortized across
+        every query in between (no per-query re-bucketing)."""
+        key = ("fused", s)
+        view = self._view_cache.get(key)
+        if view is None:
+            live = [i for i in range(len(self.levels) - 1, -1, -1)
+                    if self.levels[i]["n"][s]]
+            levels = tuple(
+                (self.levels[i]["rows"][s], self.levels[i]["cols"][s],
+                 self.levels[i]["vals"][s], self.levels[i]["fence"][s],
+                 self.levels[i]["bloom"][s])
+                for i in live)
+            blocks = tuple(self.levels[i]["block"] for i in live)
+            hashes = tuple(self.levels[i]["hashes"] for i in live)
+            u = self.l0_used
+            l0 = (self.l0_rows[s, :u], self.l0_cols[s, :u],
+                  self.l0_vals[s, :u], self.l0_fence[s, :u],
+                  self.l0_bloom[s, :u])
+            view = (levels, blocks, hashes, tuple(live), l0)
+            self._view_cache[key] = view
+        return view
+
+    def query_shard_fused(self, s: int, q: np.ndarray,
+                          mem_host: Optional[Tuple] = None,
+                          max_return: int = 256,
+                          mem_sorted: bool = False):
+        """Point row queries for one shard in ONE jitted dispatch + ONE
+        host sync: the resident leveled runs, the used L0 slots, and the
+        memtable tail are searched and age-order combined on-device. ``q``
+        must be sorted unique int32 (the ``ShardedTable`` driver
+        guarantees it); ``mem_host`` is the shard's unflushed tail as
+        (rows, cols, vals) arrays — numpy (host mirror; pass
+        ``mem_sorted=True`` if already (row, col)-sorted and
+        combiner-deduped) or device slices (stale-mirror SPMD path).
+        NO flush happens."""
+        n_q = len(q)
+        q_pad = np.full(_bucket(n_q), -1, np.int32)  # -1: matches nothing
+        q_pad[:n_q] = q
+        mem_n = 0 if mem_host is None else len(mem_host[0])
+        mem, mem_mode = None, "none"
+        if mem_n:
+            mb = _bucket(mem_n)
+            mr, mc, mv = mem_host
+            if isinstance(mr, np.ndarray):
+                pr = np.full(mb, I32_MAX, np.int32)
+                pc = np.full(mb, I32_MAX, np.int32)
+                pv = np.zeros(mb, np.float32)
+                pr[:mem_n], pc[:mem_n], pv[:mem_n] = mr, mc, mv
+                mem = (pr, pc, pv)
+                mem_mode = "sorted" if mem_sorted else "raw"
+            else:  # device arrays: pad lazily, stays async
+                pad = mb - mem_n
+                mem = (jnp.pad(mr, (0, pad), constant_values=I32_MAX),
+                       jnp.pad(mc, (0, pad), constant_values=I32_MAX),
+                       jnp.pad(mv, (0, pad)))
+                mem_mode = "raw"
+        levels, blocks, hashes, live, l0 = self._fused_views(s)
+        n_runs = len(levels) + int(l0[0].shape[0]) + (mem_mode != "none")
+        # single-int32 (col, age) key packing needs col * age_pad headroom
+        pack = self.id_capacity <= (1 << 24) and n_runs + 2 < 64
+        # small initial per-run return width: the combine cost scales with
+        # runs * width, and point reads rarely exceed a few entries per
+        # run — cnt_max triggers the widen retry when they do
+        r_ret = min(16, _bucket(max_return))
+        fn = _fused_query_fn(self.combiner, blocks, hashes, self._b0,
+                             self._h0, r_ret, mem_mode, pack,
+                             self.use_pallas)
+        self.stats["fused_dispatches"] += 1
+        out = fn(q_pad, levels, l0, mem)
+        cols_s, vals_s, keep, cnt_max, hits = (np.asarray(x) for x in out)
+        if int(cnt_max) > r_ret:  # widen + retry (batch-scanner semantics)
+            self.stats["fused_widen_retries"] += 1
+            self.stats["fused_dispatches"] += 1
+            fn = _fused_query_fn(self.combiner, blocks, hashes, self._b0,
+                                 self._h0, _bucket(int(cnt_max)), mem_mode,
+                                 pack, self.use_pallas)
+            out = fn(q_pad, levels, l0, mem)
+            cols_s, vals_s, keep, cnt_max, hits = (np.asarray(x)
+                                                   for x in out)
+        # observability: hits = [resident levels deepest-first, used slots]
+        for i in range(len(live)):
+            self.stats["runs_probed" if hits[i] else "runs_skipped"] += 1
+        for k in range(self.l0_used):
+            if self.l0_n[s, k]:
+                self.stats["runs_probed" if hits[len(live) + k]
+                           else "runs_skipped"] += 1
+        keep = keep[:n_q]
+        qi, ki = np.nonzero(keep)
+        return (q[qi].astype(np.int32), cols_s[:n_q][qi, ki],
+                vals_s[:n_q][qi, ki])
 
     def query_shard(self, s: int, q: np.ndarray, mem_r, mem_c, mem_v,
                     mem_n: int, max_return: int,
                     mem_host: Optional[Tuple[np.ndarray, ...]] = None):
-        """Point row queries for one shard: probe runs oldest→newest plus
-        the memtable tail, combine across sources. NO flush happens.
+        """Per-run baseline read path: probe runs oldest→newest plus the
+        memtable tail, one bloom-gated launch per resident run, combine
+        across sources on the host. NO flush happens.
 
         Two-phase: launch the bloom-gated query of every candidate run
-        asynchronously, then sync once and harvest — read latency is one
-        device round-trip regardless of run count. ``mem_host`` is an
-        optional host mirror of the shard's memtable (avoids pulling the
-        device buffer)."""
+        asynchronously, then sync once and harvest — latency is one device
+        round-trip but still N dispatches; ``query_shard_fused`` collapses
+        those into one. ``mem_host`` is an optional host mirror of the
+        shard's memtable (avoids pulling the device buffer)."""
         q_dev = jnp.asarray(q)
         q_sorted = np.sort(q)
         launched = []
         age = 0
-        for rows, cols, vals, fence, bloom, n, block, minr, maxr in \
+        for rows, cols, vals, fence, bloom, n, block, minr, maxr, hashes in \
                 self._iter_runs_oldest_first(s):
             age += 1
             if q_sorted[-1] < minr or q_sorted[0] > maxr:
                 self.stats["runs_skipped"] += 1
                 continue
             out = run_query_gated(rows, cols, vals, fence, bloom, q_dev,
-                                  max_return, block)
+                                  max_return, block, hashes)
             launched.append((age, (rows, cols, vals, fence, block), out))
         cand_r, cand_c, cand_v, cand_a = [], [], [], []
         for age_i, run, (any_hit, cols_o, vals_o, ok, cnt) in launched:
@@ -456,7 +797,7 @@ class LSMRuns:
         sorted lex by (row, col). NO flush happens."""
         cand = []
         age = 0
-        for rows, cols, vals, fence, bloom, n, block, minr, maxr in \
+        for rows, cols, vals, fence, bloom, n, block, minr, maxr, hashes in \
                 self._iter_runs_oldest_first(s):
             age += 1
             cand.append((np.asarray(rows[:n]), np.asarray(cols[:n]),
@@ -506,9 +847,8 @@ class LSMRuns:
         self.l0_vals = jnp.asarray(arrs["l0_vals"])
         self.l0_n = np.asarray(arrs["l0_n"]).astype(np.int64)
         self.l0_used = int(arrs["l0_used"])
-        bloom_f = jax.jit(jax.vmap(jax.vmap(
-            lambda r: bloom_build(r, self._w0))))
-        self.l0_bloom = bloom_f(self.l0_rows)
+        self.l0_bloom = _bloom_rebuild_fn(self._w0, self._h0,
+                                          nested=True)(self.l0_rows)
         self.l0_fence = self.l0_rows[:, :, ::self._b0]
         self.l0_min = l0_rows_np[:, :, 0].astype(np.int64)
         last = np.maximum(self.l0_n - 1, 0)
@@ -521,9 +861,8 @@ class LSMRuns:
             lv["cols"] = jnp.asarray(arrs[f"lvl{i}_cols"])
             lv["vals"] = jnp.asarray(arrs[f"lvl{i}_vals"])
             lv["n"] = np.asarray(arrs[f"lvl{i}_n"]).astype(np.int64)
-            w = lv["words"]
-            lv["bloom"] = jax.jit(jax.vmap(
-                functools.partial(bloom_build, n_words=w)))(lv["rows"])
+            lv["bloom"] = _bloom_rebuild_fn(lv["words"], lv["hashes"],
+                                            nested=False)(lv["rows"])
             lv["fence"] = lv["rows"][:, ::lv["block"]]
             lv["minr"] = rows_np[:, 0].astype(np.int64)
             last = np.maximum(lv["n"] - 1, 0).astype(np.int64)

@@ -12,9 +12,11 @@ Durability contract (Accumulo-shaped):
     recorded offset. A torn WAL tail (simulated crash) is discarded by the
     WAL's CRC framing.
 
-The string key dictionary is *not* persisted here — recovery restores the
-encoded (row_id, col_id, value) store; connector-level dictionary
-durability is a ROADMAP follow-on.
+This module persists the encoded (row_id, col_id, value) store only; the
+string dictionaries live one layer up — ``db.connector`` journals them
+(checkpoint snapshot + append log next to this manifest) and
+``db.connector.recover_connector`` combines both layers to restore
+string-keyed queries.
 """
 from __future__ import annotations
 
@@ -65,6 +67,8 @@ def write_snapshot(table, dirpath: str) -> str:
             "mem_cap": table.mem_cap,
             "l0_slots": runs.K0,
             "fanout": runs.fanout,
+            "bloom_bits_per_key": list(runs.bloom_bits),
+            "bloom_hashes": list(runs.bloom_hashes),
         },
         "snapshot": SNAPSHOT,
         "wal": WAL_FILE,
@@ -105,7 +109,9 @@ def recover(dirpath: str):
         batch_cap=cfg["batch_cap"], id_capacity=cfg["id_capacity"],
         combiner=cfg["combiner"], use_pallas=cfg["use_pallas"],
         memtable_cap=cfg["mem_cap"], l0_slots=cfg["l0_slots"],
-        fanout=cfg["fanout"])
+        fanout=cfg["fanout"],
+        bloom_bits_per_key=tuple(cfg.get("bloom_bits_per_key", ())) or None,
+        bloom_hashes=tuple(cfg.get("bloom_hashes", ())) or None)
     snap = os.path.join(dirpath, man["snapshot"])
     if os.path.exists(snap):
         with np.load(snap) as z:
@@ -118,7 +124,21 @@ def recover(dirpath: str):
                      _log=False)
     # chop any torn tail BEFORE re-appending: otherwise post-recovery
     # records land after the corrupt bytes and are unreachable next time
-    WriteAheadLog.truncate_torn_tail(wal_file)
+    end = WriteAheadLog.truncate_torn_tail(wal_file)
+    if end < man["wal_offset"]:
+        # the log lost bytes the snapshot already covers (pre-snapshot
+        # corruption, possibly the header itself). The data is safe in
+        # the snapshot, but appends now land BELOW the recorded offset —
+        # invisible to the next replay. Re-anchor the manifest at the
+        # truncated end (0 = fully torn: attach_wal lays a fresh header
+        # and replay starts over).
+        man["wal_offset"] = end
+        man_tmp = man_path + ".tmp"
+        with open(man_tmp, "w") as f:
+            json.dump(man, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(man_tmp, man_path)
     # recovered table keeps journaling to the same WAL
     table.attach_wal(dirpath)
     return table

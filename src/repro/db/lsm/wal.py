@@ -88,9 +88,11 @@ class WriteAheadLog:
         """Drop a torn/corrupt tail so future appends stay reachable by
         replay (a crash mid-append otherwise poisons the log: records
         appended after the torn bytes would never replay). Returns the
-        valid end offset."""
+        valid end offset. ``end == 0`` means even the header is torn: the
+        file truncates to empty so the next writer lays down a fresh
+        header (appending after header garbage would be unreplayable)."""
         end = WriteAheadLog.valid_end(path)
-        if os.path.exists(path) and os.path.getsize(path) > end > 0:
+        if os.path.exists(path) and os.path.getsize(path) > end:
             with open(path, "r+b") as f:
                 f.truncate(end)
         return end

@@ -153,6 +153,72 @@ def make_spmd_lsm_ingest_step(mesh, axis: str, num_shards: int,
     return jax.jit(fn)
 
 
+def make_spmd_lsm_query_step(mesh, axis: str, combiner: str = "last",
+                             max_return: int = 64):
+    """Fused point reads on the mesh: ONE shard_map'd jit searches each
+    shard's level run plus its ENTIRE L0 stack and combines the candidates
+    on-device — the distributed analogue of the local engine's
+    ``query_shard_fused`` (no per-run dispatches, no host combine).
+
+    Queries arrive owner-routed as ``q[S, Qb]`` (pad = -1, which matches
+    no row id); each shard answers only its slice. Age order: level run
+    (oldest) = 1, L0 slot k = 2 + k (slot k flushed before k + 1). Empty
+    L0 slots are inert I32_MAX padding. Returns
+    (cols[S, Qb, W], vals[S, Qb, W], keep[S, Qb, W]) with
+    W = (slots + 1) * max_return: per query, kept entries are its combined
+    (col, val) results, cols ascending.
+    """
+    from .kvstore import _dedup_combine
+
+    def probe(rows, cols, vals, q):
+        """Direct rank search of one sorted run (no fence metadata in the
+        mesh-side state; the run is device-local so the full searchsorted
+        is one vectorized pass)."""
+        cap = rows.shape[0]
+        start = jnp.searchsorted(rows, q, side="left").astype(jnp.int32)
+        end = jnp.searchsorted(rows, q, side="right").astype(jnp.int32)
+        idx = start[:, None] + jnp.arange(max_return, dtype=jnp.int32)
+        ok = idx < end[:, None]
+        idxc = jnp.clip(idx, 0, cap - 1)
+        return cols[idxc], vals[idxc], ok
+
+    def shard_fn(l0: L0Stack, level: Tablet, q):
+        me = jax.tree.map(lambda x: x[0], l0)
+        lv = jax.tree.map(lambda x: x[0], level)
+        qq = q[0]
+        n_q = qq.shape[0]
+        slots = me.rows.shape[0]
+        c_lv, v_lv, ok_lv = probe(lv.rows, lv.cols, lv.vals, qq)
+        c_l0, v_l0, ok_l0 = jax.vmap(
+            lambda r, c, v: probe(r, c, v, qq))(me.rows, me.cols, me.vals)
+        seg_c = [c_lv] + [c_l0[k] for k in range(slots)]
+        seg_v = [v_lv] + [v_l0[k] for k in range(slots)]
+        seg_ok = [ok_lv] + [ok_l0[k] for k in range(slots)]
+        seg_age = [jnp.full((n_q, max_return), a + 1, jnp.int32)
+                   for a in range(slots + 1)]
+        cols_all = jnp.concatenate(seg_c, axis=1)
+        vals_all = jnp.concatenate(seg_v, axis=1)
+        ok_all = jnp.concatenate(seg_ok, axis=1)
+        age_all = jnp.concatenate(seg_age, axis=1)
+        col_m = jnp.where(ok_all, cols_all, I32_MAX)
+        col_s, _, val_s = jax.lax.sort(
+            (col_m, age_all, vals_all), dimension=1, num_keys=2)
+        keep, out_v = jax.vmap(
+            lambda r, v: _dedup_combine(r, jnp.zeros_like(r), v, combiner)
+        )(col_s, val_s)
+        return (col_s[None], jnp.where(keep, out_v, 0.0)[None], keep[None])
+
+    fn = _shard_map(shard_fn, mesh=mesh,
+                    in_specs=(_l0_spec(axis), Tablet(rows=P(axis, None),
+                                                     cols=P(axis, None),
+                                                     vals=P(axis, None),
+                                                     n=P(axis)),
+                              P(axis, None)),
+                    out_specs=(P(axis, None, None), P(axis, None, None),
+                               P(axis, None, None)), **_SHARD_MAP_KW)
+    return jax.jit(fn)
+
+
 def make_spmd_lsm_compact_step(mesh, axis: str, combiner: str = "last",
                                use_pallas: bool = False):
     """Major compaction on the mesh: k-way merge each shard's L0 runs with

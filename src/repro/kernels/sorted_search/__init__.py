@@ -1,4 +1,5 @@
-from .ops import sorted_search
-from .ref import sorted_search_ref
+from .ops import sorted_search, sorted_search_batched
+from .ref import sorted_search_batched_ref, sorted_search_ref
 
-__all__ = ["sorted_search", "sorted_search_ref"]
+__all__ = ["sorted_search", "sorted_search_batched",
+           "sorted_search_batched_ref", "sorted_search_ref"]

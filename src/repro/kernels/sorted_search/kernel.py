@@ -48,3 +48,46 @@ def rank_pallas(tab: jax.Array, q: jax.Array, *, strict: bool,
         out_shape=jax.ShapeDtypeStruct((n_q, 1), jnp.int32),
         interpret=interpret,
     )(q, tab)
+
+
+def _rank_batched_kernel(q_ref, tab_ref, o_ref, *, strict: bool):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[...]        # (bq, 1) int32 — shared across runs
+    t = tab_ref[...]      # (1, bt) int32 — one tile of run k
+    cmp = (t < q) if strict else (t <= q)
+    o_ref[...] += jnp.sum(cmp.astype(jnp.int32), axis=1)[None, :]
+
+
+def rank_pallas_batched(tabs: jax.Array, q: jax.Array, *, strict: bool,
+                        block_q: int = 256, block_t: int = 2048,
+                        interpret: bool = True) -> jax.Array:
+    """Ranks of ``q`` in EACH of K stacked sorted runs — the fused LSM read
+    path searches every resident run of a shard in one launch instead of K.
+
+    Grid = (runs, query_blocks, table_tiles); the table tile axis stays the
+    innermost (sequential) dimension so each (run, query-block) output block
+    accumulates in place, exactly like the single-run kernel.
+
+    tabs: (K, N) int32, each row sorted, padded with I32_MAX.
+    q:    (Q, 1) int32.
+    Returns (K, Q) int32 ranks.
+    """
+    n_k, n_t = tabs.shape
+    n_q = q.shape[0]
+    grid = (n_k, n_q // block_q, n_t // block_t)
+    return pl.pallas_call(
+        functools.partial(_rank_batched_kernel, strict=strict),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, 1), lambda k, i, j: (i, 0)),
+            pl.BlockSpec((1, block_t), lambda k, i, j: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q), lambda k, i, j: (k, i)),
+        out_shape=jax.ShapeDtypeStruct((n_k, n_q), jnp.int32),
+        interpret=interpret,
+    )(q, tabs)

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from ..common import INTERPRET, I32_MAX, pad_to
-from .kernel import rank_pallas
+from .kernel import rank_pallas, rank_pallas_batched
 
 
 @functools.partial(jax.jit, static_argnames=("side", "block_q", "block_t", "interpret"))
@@ -22,3 +22,21 @@ def sorted_search(tab: jax.Array, q: jax.Array, side: str = "left",
     out = rank_pallas(tab2, q2, strict=(side == "left"),
                       block_q=block_q, block_t=block_t, interpret=interpret)
     return out[:n_q, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("side", "block_q", "block_t", "interpret"))
+def sorted_search_batched(tabs: jax.Array, q: jax.Array, side: str = "left",
+                          block_q: int = 256, block_t: int = 2048,
+                          interpret: bool = INTERPRET) -> jax.Array:
+    """Batched searchsorted: ranks of ``q`` in each row of ``tabs[K, N]``.
+
+    Every row must be sorted and padded with I32_MAX past its valid prefix.
+    One kernel launch covers all K runs — the fused LSM read path's rank
+    search. Returns int32[K, Q].
+    """
+    q2, n_q = pad_to(q.astype(jnp.int32).reshape(-1, 1), block_q, 0, 0)
+    tabs2, _ = pad_to(tabs.astype(jnp.int32), block_t, 1, I32_MAX)
+    out = rank_pallas_batched(tabs2, q2, strict=(side == "left"),
+                              block_q=block_q, block_t=block_t,
+                              interpret=interpret)
+    return out[:, :n_q]

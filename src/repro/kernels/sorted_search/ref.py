@@ -5,3 +5,14 @@ import jax.numpy as jnp
 def sorted_search_ref(tab, n_valid, q, side: str = "left"):
     """searchsorted over the valid prefix of ``tab``."""
     return jnp.searchsorted(tab[:n_valid], q, side=side).astype(jnp.int32)
+
+
+def sorted_search_batched_ref(tabs, q, side: str = "left"):
+    """Per-run searchsorted over stacked I32_MAX-padded runs ``tabs[K, N]``.
+
+    Pads count toward the rank only for queries >= I32_MAX, which real row
+    ids never are — identical contract to the batched kernel.
+    """
+    import jax
+    return jax.vmap(
+        lambda t: jnp.searchsorted(t, q, side=side).astype(jnp.int32))(tabs)

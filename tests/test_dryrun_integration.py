@@ -10,6 +10,8 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 SCRIPT = r"""
 from repro.launch.dryrun import run_cell   # sets XLA_FLAGS on import
 import json
@@ -25,6 +27,7 @@ print("DRYRUN-OK")
 """
 
 
+@pytest.mark.slow
 def test_dryrun_cell_both_meshes():
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
@@ -35,6 +38,7 @@ def test_dryrun_cell_both_meshes():
     assert "DRYRUN-OK" in out.stdout
 
 
+@pytest.mark.slow
 def test_ingest_dryrun_single_pod():
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"

@@ -319,13 +319,16 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
 
 from repro.db.spmd import (l0_stacked_empty, make_spmd_lsm_ingest_step,
-                           make_spmd_lsm_compact_step, stacked_empty)
+                           make_spmd_lsm_compact_step,
+                           make_spmd_lsm_query_step, stacked_empty)
 from repro.kernels.common import I32_MAX
 
 S, BCAP, IDCAP, SLOTS, CAP = 8, 128, 1 << 12, 3, 1 << 13
 mesh = jax.make_mesh((S,), ("data",))
 ingest = make_spmd_lsm_ingest_step(mesh, "data", S, IDCAP, combiner="sum")
 compact = make_spmd_lsm_compact_step(mesh, "data", combiner="sum")
+query = make_spmd_lsm_query_step(mesh, "data", combiner="sum",
+                                 max_return=64)
 
 l0 = l0_stacked_empty(S, SLOTS, S * BCAP)
 level = stacked_empty(S, CAP)
@@ -356,6 +359,38 @@ for step in range(2 * SLOTS):
         l0, level = compact(l0, level)
         assert int(np.asarray(level.n).max()) <= CAP
 
+# fused read BEFORE the final compact: the L0 stack is non-empty, so the
+# one-dispatch query must combine level + L0 runs on-device
+QB = 16
+all_keys = np.asarray(sorted({k[0] for k in oracle}), np.int64)
+rng_q = np.random.default_rng(1)
+qhost = np.full((S, QB), -1, np.int32)
+want_q = {}
+for s in range(S):
+    lo, hi = s * IDCAP // S, (s + 1) * IDCAP // S
+    mine = all_keys[(all_keys >= lo) & (all_keys < hi)]
+    pick = (rng_q.choice(mine, size=min(QB - 2, len(mine)), replace=False)
+            if len(mine) else np.empty(0, np.int64))
+    qhost[s, :len(pick)] = np.sort(pick)
+    for r in pick:
+        for (rr, cc), v in oracle.items():
+            if rr == r:
+                want_q[(int(rr), int(cc))] = v
+shq = NamedSharding(mesh, P("data", None))
+qc, qv, qk = query(l0, level, jax.device_put(jnp.asarray(qhost), shq))
+qc, qv, qk = np.asarray(qc), np.asarray(qv), np.asarray(qk)
+got_q = {}
+for s in range(S):
+    for i in range(QB):
+        if qhost[s, i] < 0:
+            continue
+        for j in np.nonzero(qk[s, i])[0]:
+            got_q[(int(qhost[s, i]), int(qc[s, i, j]))] = float(qv[s, i, j])
+assert set(got_q) == set(want_q), (len(got_q), len(want_q))
+badq = [k for k in want_q if abs(got_q[k] - want_q[k]) > 1e-2]
+assert not badq, badq[:5]
+print("LSM-SPMD-QUERY-OK", len(got_q))
+
 l0, level = compact(l0, level)
 rows = np.asarray(level.rows); cols = np.asarray(level.cols)
 vals = np.asarray(level.vals); ns = np.asarray(level.n)
@@ -370,6 +405,7 @@ print("LSM-SPMD-OK", len(got))
 """
 
 
+@pytest.mark.slow
 def test_spmd_lsm_ingest_and_compact():
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
@@ -377,4 +413,5 @@ def test_spmd_lsm_ingest_and_compact():
     out = subprocess.run([sys.executable, "-c", SPMD_SCRIPT], env=env,
                          cwd=".", capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-3000:]
+    assert "LSM-SPMD-QUERY-OK" in out.stdout
     assert "LSM-SPMD-OK" in out.stdout

@@ -1,0 +1,323 @@
+"""Crash-recovery fuzzing and bloom-filter sizing tests.
+
+* WAL truncation fuzz: the log is cut at EVERY byte offset inside the
+  tail frame (plus a random sample of offsets across the whole file);
+  ``recover()`` must always restore a prefix-consistent store — exactly
+  the batches whose records are fully intact below the cut — and a write
+  made after recovery must survive a SECOND simulated crash.
+* Bloom sizing: per-level ``bits_per_key``/``n_hashes`` plumb through
+  build, probe, fused reads, and the snapshot manifest; measured
+  false-positive rates on a fig4-shaped (power-law) key population stay
+  within the theoretical bound.
+"""
+import json
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.db.kvstore import ShardedTable
+from repro.db.lsm import recover
+from repro.db.lsm.bloom import (bloom_build, bloom_maybe_contains,
+                                num_words, suggest_hashes,
+                                theoretical_fp_rate)
+from repro.kernels.common import I32_MAX
+
+# ----------------------------------------------------------- WAL fuzzing
+BATCH_N = 4          # triples per batch -> 8 + 12*4 = 56-byte records
+N_PRE, N_POST = 3, 3  # batches before / after the checkpoint
+
+
+def _build_wal_dir(root):
+    """A checkpointed store plus post-checkpoint WAL-only batches.
+
+    Returns (dir, batches, record_ends, ckpt_offset): ``record_ends[i]``
+    is the byte offset just past post-checkpoint batch i's WAL record.
+    """
+    d = os.path.join(root, "db")
+    st = ShardedTable("fz", num_shards=1, capacity_per_shard=512,
+                      batch_cap=64, id_capacity=1 << 9, combiner="last",
+                      memtable_cap=16, engine="lsm", wal_dir=d)
+    rng = np.random.default_rng(42)
+    batches = []
+
+    def put():
+        r = rng.choice(1 << 9, BATCH_N, replace=False).astype(np.int32)
+        c = rng.integers(0, 4, BATCH_N).astype(np.int32)
+        v = rng.normal(size=BATCH_N).astype(np.float32)
+        st.insert(r, c, v)
+        batches.append((r, c, v))
+        return st._wal.tell()
+
+    for _ in range(N_PRE):
+        put()
+    st.checkpoint()
+    ckpt_off = st._wal.tell()
+    ends = [put() for _ in range(N_POST)]
+    st._wal.close()  # simulated crash: no further flushes
+    return d, batches, ends, ckpt_off
+
+
+def _expected_rows(batches, ends, ckpt_off, cut):
+    """Prefix-consistent oracle: checkpointed batches always survive;
+    a post-checkpoint batch survives iff its whole record is below the
+    cut (replay stops at the first torn record, and records are
+    sequential, so the survivors are exactly a prefix)."""
+    n_ok = sum(1 for e in ends if e <= max(cut, ckpt_off))
+    out = {}
+    for r, c, v in batches[:N_PRE + n_ok]:
+        for a, b, x in zip(r, c, v):
+            out[(int(a), int(b))] = float(x)  # combiner == last
+    return out
+
+
+def _scan_dict(st):
+    r, c, v = st.scan()
+    return {(int(a), int(b)): float(x) for a, b, x in zip(r, c, v)}
+
+
+def test_wal_truncation_fuzz(tmp_path):
+    src, batches, ends, ckpt_off = _build_wal_dir(str(tmp_path))
+    wal = os.path.join(src, "wal.log")
+    size = os.path.getsize(wal)
+    tail_start = ends[-2]  # every byte of the final record's frame
+    rng = np.random.default_rng(7)
+    sampled = sorted(set(
+        int(x) for x in rng.integers(0, tail_start, 12)))  # incl. header
+    cuts = sampled + list(range(tail_start, size + 1))
+    second_crash_every = 6
+    for i, cut in enumerate(cuts):
+        d = str(tmp_path / f"cut{cut}")
+        shutil.copytree(src, d)
+        with open(os.path.join(d, "wal.log"), "r+b") as f:
+            f.truncate(cut)
+        st = recover(d)
+        want = _expected_rows(batches, ends, ckpt_off, cut)
+        got = _scan_dict(st)
+        assert got == pytest.approx(want), (cut, sorted(got), sorted(want))
+        if i % second_crash_every == 0:
+            # post-recovery write must survive a SECOND crash (recovery
+            # truncated the torn tail, so the new record is replayable)
+            st.insert(np.asarray([500], np.int32), np.asarray([0], np.int32),
+                      np.asarray([9.5], np.float32))
+            st._wal.close()
+            st2 = recover(d)
+            got2 = _scan_dict(st2)
+            want2 = dict(want)
+            want2[(500, 0)] = 9.5
+            assert got2 == pytest.approx(want2), (cut, sorted(got2))
+            st2._wal.close()
+        st._wal.close()
+
+
+def test_wal_header_corruption_keeps_post_recovery_writes(tmp_path):
+    """A crash that tears the WAL HEADER itself must not poison the log:
+    recovery keeps the snapshot, re-anchors the manifest offset, lays a
+    fresh header, and a post-recovery write survives the next crash
+    (regression: appends after header garbage were unreplayable)."""
+    src, batches, ends, ckpt_off = _build_wal_dir(str(tmp_path))
+    for cut in (0, 3, 7):
+        d = str(tmp_path / f"hdr{cut}")
+        shutil.copytree(src, d)
+        with open(os.path.join(d, "wal.log"), "r+b") as f:
+            f.truncate(cut)
+        st = recover(d)
+        want = _expected_rows(batches, ends, ckpt_off, cut)
+        assert _scan_dict(st) == pytest.approx(want), cut
+        st.insert(np.asarray([501], np.int32), np.asarray([0], np.int32),
+                  np.asarray([7.5], np.float32))
+        st._wal.close()
+        st2 = recover(d)
+        want[(501, 0)] = 7.5
+        assert _scan_dict(st2) == pytest.approx(want), cut
+        st2._wal.close()
+
+
+def test_wal_mid_file_corruption_stops_replay_cleanly(tmp_path):
+    """Flipping bytes INSIDE an early record (not just truncating) must
+    drop that record and everything after it — CRC framing, not length
+    trust."""
+    src, batches, ends, ckpt_off = _build_wal_dir(str(tmp_path))
+    d = str(tmp_path / "corrupt")
+    shutil.copytree(src, d)
+    wal = os.path.join(d, "wal.log")
+    with open(wal, "r+b") as f:  # corrupt the payload of post-ckpt batch 1
+        f.seek(ends[0] + 12)
+        f.write(b"\xff\xff\xff")
+    st = recover(d)
+    want = _expected_rows(batches, ends, ckpt_off, ends[0])
+    assert _scan_dict(st) == pytest.approx(want)
+    st._wal.close()
+
+
+# ------------------------------------------------- dictionary durability
+def test_connector_recovery_restores_string_queries(tmp_path):
+    """The StringDicts persist alongside the snapshot manifest (checkpoint
+    snapshot + append journal), so ``recover_connector`` restores
+    string-keyed queries — including keys interned AFTER the last
+    checkpoint, and string VALUES — and stays durable through a second
+    crash."""
+    from repro.db import dbsetup, recover_connector
+
+    d = str(tmp_path / "wal_root")
+    DB = dbsetup("durdb", dict(num_shards=2, capacity_per_shard=2048,
+                               batch_cap=256, id_capacity=1 << 12,
+                               wal_root=d))
+    T = DB["edges"]
+    T.put_triple(np.asarray(["a", "b"], object),
+                 np.asarray(["x", "y"], object), np.asarray([1.0, 2.0]))
+    T.checkpoint()
+    # post-checkpoint: new string keys live only in the dict journal
+    T.put_triple(np.asarray(["c"], object), np.asarray(["z"], object),
+                 np.asarray([3.0]))
+    want = {("a", "x", 1.0), ("b", "y", 2.0), ("c", "z", 3.0)}
+    del T, DB  # crash
+    DB2, T2 = recover_connector(d, "edges")
+    got = T2["a,b,c,", :]
+    assert {(r, c, float(v)) for r, c, v in zip(*got.triples())} == want
+    # recovered connector stays writable + durable through a SECOND crash
+    T2.put_triple(np.asarray(["d"], object), np.asarray(["w"], object),
+                  np.asarray([4.0]))
+    del T2, DB2
+    DB3, T3 = recover_connector(d, "edges")
+    r, c, v = T3["d,", :].triples()
+    assert (list(r), list(c), list(v)) == (["d"], ["w"], [4.0])
+    # string VALUES round-trip via the per-table valdict
+    T4 = DB3["svals"]
+    T4.put_triple(np.asarray(["p"], object), np.asarray(["q"], object),
+                  np.asarray(["hello"], object))
+    T4.checkpoint()
+    del T4, DB3
+    _, T5 = recover_connector(d, "svals")
+    assert list(T5["p,", :].triples()[2]) == ["hello"]
+
+
+def test_dict_checkpoint_crash_window_keeps_ids_stable(tmp_path):
+    """Crash BETWEEN the dict checkpoint's snapshot write and its journal
+    reset: the journal still holds strings the snapshot already covers;
+    replay must dedup them or every later id shifts and string queries go
+    silently empty (regression)."""
+    from repro.db import dbsetup, recover_connector
+
+    d = str(tmp_path / "wal_root")
+    DB = dbsetup("durdb2", dict(num_shards=1, capacity_per_shard=1024,
+                                batch_cap=128, id_capacity=1 << 10,
+                                wal_root=d))
+    T = DB["t"]
+    T.put_triple(np.asarray(["a", "b"], object),
+                 np.asarray(["x", "y"], object), np.asarray([1.0, 2.0]))
+    log = os.path.join(d, "keydict.log")
+    with open(log, encoding="utf-8") as f:
+        pre_ckpt_log = f.read()  # entries about to be snapshotted
+    T.checkpoint()
+    T.put_triple(np.asarray(["c"], object), np.asarray(["z"], object),
+                 np.asarray([3.0]))
+    del T, DB  # crash — then rewrite the journal to the torn-checkpoint
+    # shape: snapshot written but journal never reset, so it still leads
+    # with entries the snapshot already covers
+    with open(log, encoding="utf-8") as f:
+        post = f.read()
+    with open(log, "w", encoding="utf-8") as f:
+        f.write(pre_ckpt_log + post)
+    DB2, T2 = recover_connector(d, "t")
+    got = T2["a,b,c,", :]
+    assert {(r, c, float(v)) for r, c, v in zip(*got.triples())} == \
+        {("a", "x", 1.0), ("b", "y", 2.0), ("c", "z", 3.0)}
+
+
+# ----------------------------------------------------------- bloom sizing
+def _fig4_keys(n, id_cap=1 << 20, seed=0):
+    """Power-law row ids, the fig4 workload shape (graph500-style hubs)."""
+    rng = np.random.default_rng(seed)
+    raw = (rng.pareto(1.2, n) * (id_cap // 64)).astype(np.int64)
+    return np.unique(np.clip(raw, 0, id_cap - 1).astype(np.int32))
+
+
+@pytest.mark.parametrize("bits", [4, 8, 16])
+def test_bloom_fp_rate_within_theoretical_bound(bits):
+    keys = _fig4_keys(4000)[:2000]
+    cap = 2048
+    rows = np.full(cap, I32_MAX, np.int32)
+    rows[:len(keys)] = np.sort(keys)
+    w = num_words(cap, bits)
+    h = suggest_hashes(bits)
+    words = np.asarray(bloom_build(rows, w, h))
+    assert np.asarray(bloom_maybe_contains(words, keys, h)).all(), \
+        "bloom false negative"
+    universe = np.arange(1 << 20, dtype=np.int32)
+    absent = np.setdiff1d(
+        np.random.default_rng(1).choice(universe, 60000, replace=False),
+        keys)[:40000]
+    fp = float(np.asarray(bloom_maybe_contains(words, absent, h)).mean())
+    bound = theoretical_fp_rate(len(keys), w, h)
+    # xor-shift hashes are not ideal hashes; allow 2x + absolute slack
+    assert fp <= 2.0 * bound + 0.01, (bits, fp, bound)
+
+
+def test_bloom_more_bits_fewer_false_positives():
+    keys = _fig4_keys(4000)[:2000]
+    cap = 2048
+    rows = np.full(cap, I32_MAX, np.int32)
+    rows[:len(keys)] = np.sort(keys)
+    absent = np.setdiff1d(
+        np.random.default_rng(2).integers(0, 1 << 20, 60000).astype(np.int32),
+        keys)[:40000]
+    rates = []
+    for bits in (2, 8, 16):
+        w, h = num_words(cap, bits), suggest_hashes(bits)
+        words = np.asarray(bloom_build(rows, w, h))
+        rates.append(
+            float(np.asarray(bloom_maybe_contains(words, absent, h)).mean()))
+    assert rates[0] > rates[1] > rates[2], rates
+    assert rates[2] < 0.01, rates
+
+
+def test_per_level_bloom_sizing_plumbs_through_engine(tmp_path):
+    """(8, 12, 16) bits/key with per-level hash counts: deeper levels get
+    denser filters; reads stay exact through flush/compaction AND through
+    a snapshot/recover round-trip (manifest records the sizing)."""
+    d = str(tmp_path / "db")
+    st = ShardedTable("sz", num_shards=1, capacity_per_shard=4096,
+                      batch_cap=256, id_capacity=1 << 10, combiner="sum",
+                      memtable_cap=64, engine="lsm", wal_dir=d,
+                      bloom_bits_per_key=(8, 12, 16),
+                      bloom_hashes=(4, 6, 8))
+    runs = st._runs
+    assert runs.bloom_bits[0] == 8 and runs.bloom_bits[-1] == 16
+    assert runs.levels[-1]["hashes"] == 8
+    # deeper level, denser filter (words scale with bits at equal cap):
+    same_cap = {}
+    for lv in runs.levels:
+        same_cap.setdefault(lv["cap"], []).append(lv["words"])
+    assert runs.levels[-1]["words"] == num_words(runs.levels[-1]["cap"], 16)
+    rng = np.random.default_rng(3)
+    oracle = {}
+    for _ in range(20):
+        r = rng.integers(0, 1 << 10, 48).astype(np.int32)
+        c = rng.integers(0, 4, 48).astype(np.int32)
+        v = rng.normal(size=48).astype(np.float32)
+        st.insert(r, c, v)
+        for a, b, x in zip(r, c, v):
+            oracle[(int(a), int(b))] = oracle.get((int(a), int(b)), 0.0) \
+                + float(x)
+    assert st.engine_stats()["major_compactions"] >= 1
+    q = np.unique([k[0] for k in oracle])[:40].astype(np.int32)
+    got = {(int(a), int(b)): float(x)
+           for a, b, x in zip(*st.query_rows(q))}
+    want = {k: v for k, v in oracle.items() if k[0] in set(q.tolist())}
+    assert set(got) == set(want)
+    for k in want:
+        assert got[k] == pytest.approx(want[k], rel=1e-4)
+    # sizing survives crash recovery via the manifest
+    st.checkpoint()
+    with open(os.path.join(d, "MANIFEST.json")) as f:
+        man = json.load(f)
+    assert man["config"]["bloom_bits_per_key"] == list(runs.bloom_bits)
+    st._wal.close()
+    rec = recover(d)
+    assert rec._runs.bloom_bits == runs.bloom_bits
+    assert rec._runs.bloom_hashes == runs.bloom_hashes
+    got2 = {(int(a), int(b)): float(x)
+            for a, b, x in zip(*rec.query_rows(q))}
+    assert got2 == pytest.approx(got)

@@ -1,0 +1,228 @@
+"""Differential property tests for the storage engines.
+
+Random interleavings of ingest/flush/compact/query are applied to THREE
+readers of the same logical table — the LSM engine's fused single-dispatch
+read path, its per-run baseline path, and the legacy single-run engine —
+plus a sequential dict oracle; all four must agree for every combiner.
+Runs under real hypothesis when installed, else the deterministic shim
+(tests/_hypothesis_compat.py).
+
+Also home to the fused read path's structural guarantees: the
+one-dispatch assertion (memtable + L0 runs + leveled runs answered by
+exactly one compiled-function invocation) and the batched Pallas rank
+kernel's equivalence to its reference.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.db.kvstore import COMBINERS, ShardedTable
+from repro.db.lsm import engine as lsm_engine
+from repro.kernels.common import I32_MAX
+from repro.kernels.sorted_search import (sorted_search_batched,
+                                         sorted_search_batched_ref)
+
+# one tiny fixed geometry for EVERY example: jit caches stay warm across
+# examples, so each draw costs milliseconds, not a recompile
+CFG = dict(num_shards=2, capacity_per_shard=2048, batch_cap=256,
+           id_capacity=1 << 8, memtable_cap=32, l0_slots=3)
+
+
+def _mk(engine, fused):
+    return ShardedTable(f"prop_{engine}_{fused}", engine=engine,
+                        fused_reads=fused, combiner=_mk.combiner, **CFG)
+
+
+def _oracle_apply(oracle, r, c, v, combiner):
+    for a, b, x in zip(r, c, v):
+        k = (int(a), int(b))
+        if k in oracle:
+            oracle[k] = {"last": float(x), "sum": oracle[k] + float(x),
+                         "min": min(oracle[k], float(x)),
+                         "max": max(oracle[k], float(x))}[combiner]
+        else:
+            oracle[k] = float(x)
+
+
+def _as_dict(r, c, v):
+    return {(int(a), int(b)): float(x) for a, b, x in zip(r, c, v)}
+
+
+def _check_close(got, want, label, ctx):
+    assert set(got) == set(want), (label, ctx,
+                                   set(got) ^ set(want))
+    for k in want:
+        assert got[k] == pytest.approx(want[k], rel=1e-4, abs=1e-5), \
+            (label, ctx, k, got[k], want[k])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1),
+       st.sampled_from(COMBINERS),
+       st.lists(st.sampled_from(["ins", "ins", "ins", "flush", "compact",
+                                 "query"]), min_size=4, max_size=12))
+def test_engines_and_read_paths_agree(seed, combiner, ops):
+    """insert/flush/compact in random order; every query op must return
+    identical results from the fused LSM path, the per-run LSM path, the
+    legacy engine, and the oracle. Ends with a full-scan comparison."""
+    rng = np.random.default_rng(seed)
+    _mk.combiner = combiner
+    lsm = _mk("lsm", True)          # one LSM store, two read procedures
+    single = _mk("single", False)
+    oracle = {}
+
+    def check_query():
+        keys = np.asarray(sorted({k[0] for k in oracle}), np.int32)
+        if len(keys) == 0:
+            return
+        pick = rng.choice(keys, size=min(12, len(keys)), replace=False)
+        absent = rng.integers(0, CFG["id_capacity"], 3).astype(np.int32)
+        q = np.unique(np.concatenate([pick, absent])).astype(np.int32)
+        want = {k: v for k, v in oracle.items() if k[0] in set(q.tolist())}
+        lsm.fused_reads = True
+        fused = _as_dict(*lsm.query_rows(q))
+        lsm.fused_reads = False
+        perrun = _as_dict(*lsm.query_rows(q))
+        lsm.fused_reads = True
+        legacy = _as_dict(*single.query_rows(q))
+        _check_close(fused, want, "fused", (seed, combiner))
+        _check_close(perrun, want, "per-run", (seed, combiner))
+        _check_close(legacy, want, "single-engine", (seed, combiner))
+
+    for op in ops:
+        if op == "ins":
+            n = int(rng.integers(1, 28))
+            r = rng.integers(0, CFG["id_capacity"], n).astype(np.int32)
+            c = rng.integers(0, 4, n).astype(np.int32)
+            v = (rng.integers(-4, 5, n).astype(np.float32)
+                 if combiner == "sum" else
+                 rng.normal(size=n).astype(np.float32))
+            lsm.insert(r, c, v)
+            single.insert(r, c, v)
+            _oracle_apply(oracle, r, c, v, combiner)
+        elif op == "flush":
+            lsm.flush()
+            single.flush()
+        elif op == "compact":
+            lsm.major_compact()
+            single.flush()  # legacy engine has no compaction
+        else:
+            check_query()
+    check_query()
+    got = _as_dict(*lsm.scan())
+    _check_close(got, oracle, "scan", (seed, combiner))
+
+
+def test_fused_point_query_is_one_dispatch(monkeypatch):
+    """The acceptance bar: a point query against a shard holding a
+    non-empty memtable, >=2 L0 runs, and >=2 leveled runs runs exactly ONE
+    compiled-function invocation — counted via the engine's dispatch
+    counter, with every other query entry point poisoned so a stray
+    per-run launch fails loudly."""
+    st_ = ShardedTable("one_dispatch", num_shards=1,
+                       capacity_per_shard=4096, batch_cap=256,
+                       id_capacity=1 << 10, combiner="sum",
+                       memtable_cap=64, l0_slots=4, engine="lsm")
+    rng = np.random.default_rng(0)
+    oracle = {}
+
+    def put(n, base):
+        r = (base + rng.integers(0, 200, n)).astype(np.int32)
+        c = rng.integers(0, 4, n).astype(np.int32)
+        v = rng.normal(size=n).astype(np.float32)
+        st_.insert(r, c, v)
+        for a, b, x in zip(r, c, v):
+            oracle[(int(a), int(b))] = oracle.get((int(a), int(b)), 0.0) \
+                + float(x)
+
+    # two leveled runs: a deep compaction, then a shallow one
+    for _ in range(8):       # 8 x 64 fills L0 twice -> deepest level
+        put(64, 0)
+    st_.major_compact()
+    for _ in range(2):
+        put(64, 200)
+    st_.major_compact()      # smaller merge -> shallower level
+    levels_live = sum(1 for lv in st_._runs.levels if lv["n"][0] > 0)
+    assert levels_live >= 2, [int(lv["n"][0]) for lv in st_._runs.levels]
+    put(64, 400)             # L0 run 1
+    st_.flush()
+    put(64, 600)             # L0 run 2
+    st_.flush()
+    put(20, 800)             # non-empty memtable tail
+    assert st_._runs.l0_used >= 2 and int(st_._mem_n[0]) > 0
+
+    # poison every non-fused query entry point
+    def boom(*a, **k):
+        raise AssertionError("non-fused query path was dispatched")
+    monkeypatch.setattr(lsm_engine, "run_query_gated", boom)
+    monkeypatch.setattr(lsm_engine, "run_query_rows", boom)
+
+    keys = np.asarray(sorted({k[0] for k in oracle}), np.int32)
+    q = rng.choice(keys, 8, replace=False).astype(np.int32)
+    before = dict(st_.engine_stats())
+    qr, qc, qv = st_.query_rows(np.unique(q))
+    after = st_.engine_stats()
+    assert after["fused_dispatches"] - before["fused_dispatches"] == 1, \
+        (before, after)
+    assert after["fused_widen_retries"] == before["fused_widen_retries"]
+    # and the answer is still exactly right
+    want = {k: v for k, v in oracle.items() if k[0] in set(q.tolist())}
+    got = _as_dict(qr, qc, qv)
+    _check_close(got, want, "one-dispatch", ())
+    # reads never flushed anything
+    assert int(st_._mem_n[0]) > 0 and st_._runs.l0_used >= 2
+
+
+def test_fused_handles_empty_runs_and_absent_keys():
+    """Static stacked shapes mean empty L0 slots/levels ride along as
+    I32_MAX padding — they must contribute nothing, including for queries
+    that match nothing anywhere."""
+    st_ = ShardedTable("empt", num_shards=2, capacity_per_shard=1024,
+                       batch_cap=128, id_capacity=1 << 8, combiner="last",
+                       memtable_cap=32, engine="lsm")
+    # memtable only (no runs at all)
+    st_.insert(np.asarray([5], np.int32), np.asarray([1], np.int32),
+               np.asarray([2.0], np.float32))
+    r, c, v = st_.query_rows(np.asarray([5, 77], np.int32))
+    assert _as_dict(r, c, v) == {(5, 1): 2.0}
+    # runs only (flushed), absent keys
+    st_.flush()
+    r, c, v = st_.query_rows(np.asarray([5], np.int32))
+    assert _as_dict(r, c, v) == {(5, 1): 2.0}
+    r, c, v = st_.query_rows(np.asarray([77, 99], np.int32))
+    assert len(r) == 0
+    # fully empty shard: no dispatch needed, no crash
+    empty = ShardedTable("empt2", num_shards=1, capacity_per_shard=1024,
+                         batch_cap=128, id_capacity=1 << 8,
+                         memtable_cap=32, engine="lsm")
+    r, c, v = empty.query_rows(np.asarray([3], np.int32))
+    assert len(r) == 0 and empty.engine_stats()["fused_dispatches"] == 0
+
+
+def test_fused_duplicate_query_ids_parity():
+    st_ = ShardedTable("dupf", num_shards=1, capacity_per_shard=256,
+                       batch_cap=64, id_capacity=1 << 10, engine="lsm")
+    st_.insert(np.asarray([7, 7], np.int32), np.asarray([1, 2], np.int32),
+               np.asarray([1.0, 2.0], np.float32))
+    r, c, v = st_.query_rows(np.asarray([7, 7], np.int32))
+    assert len(r) == 4
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 4),
+       st.integers(1, 40))
+def test_batched_rank_search_matches_ref(seed, n_runs, n_q):
+    """The fused path's batched Pallas rank kernel == vmapped searchsorted
+    for ragged stacked runs (interpret mode on CPU)."""
+    rng = np.random.default_rng(seed)
+    cap = 128
+    tabs = np.full((n_runs, cap), I32_MAX, np.int32)
+    for k in range(n_runs):
+        n = int(rng.integers(0, cap + 1))
+        tabs[k, :n] = np.sort(rng.integers(0, 500, n)).astype(np.int32)
+    q = rng.integers(0, 500, n_q).astype(np.int32)
+    for side in ("left", "right"):
+        got = np.asarray(sorted_search_batched(tabs, q, side,
+                                               interpret=True))
+        ref = np.asarray(sorted_search_batched_ref(tabs, q, side))
+        np.testing.assert_array_equal(got, ref, err_msg=f"{side}")

@@ -7,6 +7,8 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -75,6 +77,7 @@ print("SPMD-OK", len(got[0]))
 """
 
 
+@pytest.mark.slow
 def test_spmd_ingest_matches_local_driver():
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"

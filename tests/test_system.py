@@ -9,8 +9,10 @@ from repro.core import Assoc
 from repro.data import TokenStore, synthetic_corpus
 from repro.data.graph500 import graph500_triples
 from repro.db import EdgeSchema, dbsetup
+import pytest
 
 
+@pytest.mark.slow
 def test_paper_pipeline_end_to_end():
     # 1. ingest a power-law graph with the D4M 2.0 schema
     server = dbsetup("e2e", num_shards=4, capacity_per_shard=1 << 16,
@@ -38,6 +40,7 @@ def test_paper_pipeline_end_to_end():
     assert set(hop2.row) == {str(hubs[0])}
 
 
+@pytest.mark.slow
 def test_store_backed_training_reduces_loss():
     from repro.configs import get_reduced
     from repro.models import build, init_params
