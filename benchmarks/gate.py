@@ -1,0 +1,149 @@
+"""CI bench-gate: fail the build when a tracked benchmark ratio regresses.
+
+CI runs benchmarks on every push but — before this gate — never COMPARED
+them, so the BENCH_* trajectory could regress silently. The gate re-runs
+the smoke benchmarks, extracts the tracked speedup ratios from the fresh
+JSON, and compares each against the baselines committed at the repo root:
+
+  * ``fused_vs_per_run``   — fused single-dispatch point reads vs the
+                             per-run baseline (min over BENCH_query rows)
+  * ``scan_vs_point``      — fused range scans vs id-list point expansion
+                             (min over scan rows with range_len >= 64)
+  * ``lsm_vs_single``      — LSM ingest vs the single-run engine
+                             (BENCH_ingest ``lsm_ingest_speedup``)
+
+A tracked ratio may drop at most ``--threshold`` (default 20%) below its
+committed baseline; any deeper drop exits nonzero. Ratios are used rather
+than absolute latencies so shared-runner noise cancels out (both sides of
+each A/B run on the same machine in the same process).
+
+Usage (CI and local are the same invocation):
+
+  PYTHONPATH=src python -m benchmarks.ingest_bench --smoke --out fresh_ingest.json
+  PYTHONPATH=src python -m benchmarks.query_bench --fused-compare --scan-compare \
+      --reps 50 --out fresh_query.json
+  PYTHONPATH=src python -m benchmarks.gate \
+      --baseline-ingest BENCH_ingest.json --baseline-query BENCH_query.json \
+      --new-ingest fresh_ingest.json --new-query fresh_query.json
+
+A markdown summary table is printed and, when ``$GITHUB_STEP_SUMMARY`` is
+set (CI), appended there too.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+MIN_SCAN_LEN = 64   # acceptance floor: scan must win from this length up
+
+
+def extract_ratios(ingest: Optional[dict],
+                   query: Optional[dict]) -> Dict[str, float]:
+    """Pull the tracked speedup ratios out of benchmark JSON artifacts.
+    Missing files/sections simply contribute no ratio (the gate reports
+    them as untracked rather than failing — lets baselines grow)."""
+    out: Dict[str, float] = {}
+    if query:
+        rows = query.get("rows") or []
+        speedups = [r["fused_speedup"] for r in rows
+                    if "fused_speedup" in r]
+        if speedups:
+            out["fused_vs_per_run"] = min(speedups)
+        scan_rows = query.get("scan_rows") or []
+        scans = [r["scan_speedup"] for r in scan_rows
+                 if r.get("range_len", 0) >= MIN_SCAN_LEN]
+        if scans:
+            out["scan_vs_point"] = min(scans)
+    if ingest:
+        if "lsm_ingest_speedup" in ingest:
+            out["lsm_vs_single"] = float(ingest["lsm_ingest_speedup"])
+    return out
+
+
+def compare(baseline: Dict[str, float], new: Dict[str, float],
+            threshold: float = 0.2) -> Tuple[List[dict], bool]:
+    """One row per tracked ratio; ``ok`` is False iff a ratio present in
+    both sides dropped more than ``threshold`` below its baseline, OR a
+    baseline-tracked ratio is absent from the fresh run (fail-closed: a
+    change that makes a gated metric disappear — flag drift, empty bench
+    section — must not pass as 'untracked'). A ratio only the fresh run
+    tracks stays advisory, so baselines can grow."""
+    rows, ok = [], True
+    for name in sorted(set(baseline) | set(new)):
+        b, n = baseline.get(name), new.get(name)
+        if b is None:
+            rows.append({"ratio": name, "baseline": b, "new": n,
+                         "rel": None, "status": "untracked"})
+            continue
+        if n is None:
+            ok = False
+            rows.append({"ratio": name, "baseline": b, "new": n,
+                         "rel": None, "status": "MISSING"})
+            continue
+        rel = n / b if b else float("inf")
+        regressed = rel < 1.0 - threshold
+        ok = ok and not regressed
+        rows.append({"ratio": name, "baseline": b, "new": n, "rel": rel,
+                     "status": "REGRESSED" if regressed else "ok"})
+    return rows, ok
+
+
+def markdown(rows: List[dict], threshold: float) -> str:
+    def fmt(x):
+        return "—" if x is None else f"{x:.2f}x"
+
+    lines = ["## Bench gate",
+             f"tracked speedup ratios; fail below "
+             f"{(1.0 - threshold) * 100:.0f}% of baseline", "",
+             "| ratio | baseline | new | new/baseline | status |",
+             "|---|---|---|---|---|"]
+    for r in rows:
+        rel = "—" if r["rel"] is None else f"{r['rel']:.2f}"
+        mark = {"ok": "✅", "REGRESSED": "❌",
+                "MISSING": "❌"}.get(r["status"], "➖")
+        lines.append(f"| {r['ratio']} | {fmt(r['baseline'])} | "
+                     f"{fmt(r['new'])} | {rel} | {mark} {r['status']} |")
+    return "\n".join(lines) + "\n"
+
+
+def _load(path: Optional[str]) -> Optional[dict]:
+    if not path or not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline-ingest", default="BENCH_ingest.json")
+    ap.add_argument("--baseline-query", default="BENCH_query.json")
+    ap.add_argument("--new-ingest", required=True)
+    ap.add_argument("--new-query", required=True)
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="max allowed relative drop (0.2 = 20%%)")
+    args = ap.parse_args(argv)
+    baseline = extract_ratios(_load(args.baseline_ingest),
+                              _load(args.baseline_query))
+    new = extract_ratios(_load(args.new_ingest), _load(args.new_query))
+    rows, ok = compare(baseline, new, args.threshold)
+    md = markdown(rows, args.threshold)
+    print(md)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(md)
+    if not baseline:
+        print("no committed baselines found — gate is advisory this run")
+        return 0
+    if not ok:
+        print("bench gate FAILED: tracked ratio regressed past threshold")
+        return 1
+    print("bench gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -160,7 +160,8 @@ def batch_sweep(scale=12, k=4, budgets=(50_000, 200_000, 500_000, 2_000_000)):
 
 def engine_compare(entries_per_shard: int = 1 << 18, shards: int = 2,
                    batch: int = 1 << 14, memtable: int = 1 << 15,
-                   n_queries: int = 2048, seed: int = 0) -> dict:
+                   n_queries: int = 2048, seed: int = 0,
+                   repeats: int = 1) -> dict:
     """A/B the storage engines on identical int-triple streams.
 
     Demonstrates the LSM claim: flush cost scales with MEMTABLE size, not
@@ -169,6 +170,13 @@ def engine_compare(entries_per_shard: int = 1 << 18, shards: int = 2,
     grows, while the LSM engine's minor compactions stay O(memtable) with
     amortized leveling. The query phase measures point reads and verifies
     the LSM path never flushes (memtable untouched).
+
+    ``repeats`` interleaves that many (single, lsm) ingest runs — fresh
+    store each — and reports the MEDIAN per-repeat lsm/single wall ratio:
+    shared-runner load hits both engines of a repeat pair alike, so the
+    ratio the CI bench gate tracks stays stable even when absolute walls
+    swing. Per-engine rates report the best wall (one-sided noise
+    filter).
     """
     id_cap = 1 << 22
     total = entries_per_shard * shards
@@ -179,25 +187,42 @@ def engine_compare(entries_per_shard: int = 1 << 18, shards: int = 2,
     vals = rng.normal(size=total).astype(np.float32)
     out = {"config": {"entries_per_shard": entries_per_shard,
                       "shards": shards, "batch": batch,
-                      "memtable": memtable, "n_queries": n_queries},
+                      "memtable": memtable, "n_queries": n_queries,
+                      "repeats": repeats},
            "engines": {}}
     q = rng.choice(rows, n_queries).astype(np.int32)
-    for engine in ("single", "lsm"):
-        mk = lambda name: ShardedTable(
+
+    def mk(engine, name):
+        return ShardedTable(
             name, num_shards=shards, capacity_per_shard=cap,
             batch_cap=batch, id_capacity=id_cap, memtable_cap=memtable,
             engine=engine)
-        warm = mk(f"warm_{engine}")  # compile append shapes off the clock
+
+    # ---- phase 1: interleaved ingest timing (single/lsm back-to-back
+    # within each repeat, so load noise cancels in the per-repeat ratio)
+    walls = {"single": [], "lsm": []}
+    stores = {}
+    for engine in ("single", "lsm"):
+        warm = mk(engine, f"warm_{engine}")  # compile appends off-clock
         warm.insert(rows[:batch], cols[:batch], vals[:batch])
         warm.flush()
-        store = mk(f"cmp_{engine}")
-        store.warmup()  # compile flush + every compaction depth
-        t0 = time.time()
-        for i in range(0, total, batch):
-            store.insert(rows[i:i + batch], cols[i:i + batch],
-                         vals[i:i + batch])
-        store.flush()
-        ingest_wall = time.time() - t0
+    for rep in range(max(repeats, 1)):
+        for engine in ("single", "lsm"):
+            store = mk(engine, f"cmp_{engine}_{rep}")
+            store.warmup()  # compile flush + every compaction depth
+            t0 = time.time()
+            for i in range(0, total, batch):
+                store.insert(rows[i:i + batch], cols[i:i + batch],
+                             vals[i:i + batch])
+            store.flush()
+            walls[engine].append(time.time() - t0)
+            stores[engine] = store
+    ratios = sorted(s / l for s, l in zip(walls["single"], walls["lsm"]))
+
+    # ---- phase 2: flush-cost probe + query phase per engine
+    for engine in ("single", "lsm"):
+        store = stores[engine]
+        ingest_wall = min(walls[engine])
         # explicit flush-cost probe at FULL table size: the single-run
         # engine pays O(capacity) to absorb one memtable, the LSM engine
         # O(memtable) — the core scaling claim, measured directly
@@ -233,11 +258,14 @@ def engine_compare(entries_per_shard: int = 1 << 18, shards: int = 2,
               f"queries={n_queries / query_wall:>10,.0f} q/s "
               f"full-table flush={flush_wall * 1e3:>8.1f} ms "
               f"flushed_on_read={flushed}")
-    single = out["engines"]["single"]["entries_per_s"]
-    lsm = out["engines"]["lsm"]["entries_per_s"]
-    out["lsm_ingest_speedup"] = lsm / single
-    print(f"LSM ingest speedup over single-run: {lsm / single:.2f}x "
-          f"at {entries_per_shard:,} entries/shard")
+    # median of the per-repeat interleaved ratios (== best-wall ratio
+    # when repeats == 1): the trajectory metric the CI bench gate tracks
+    out["lsm_ingest_speedup"] = ratios[len(ratios) // 2]
+    out["lsm_ingest_speedup_all"] = ratios
+    print(f"LSM ingest speedup over single-run: "
+          f"{out['lsm_ingest_speedup']:.2f}x "
+          f"at {entries_per_shard:,} entries/shard "
+          f"(median of {len(ratios)} interleaved repeats)")
     return out
 
 
@@ -251,12 +279,17 @@ def main() -> None:
                     help="full-size engine A/B (2^18 entries/shard)")
     ap.add_argument("--entries-per-shard", type=int, default=None)
     ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--repeats", type=int, default=1,
+                    help="interleave N (single, lsm) ingest runs; the "
+                         "reported lsm_ingest_speedup is the MEDIAN "
+                         "per-repeat ratio (noise-robust CI gate metric)")
     args = ap.parse_args()
     if args.smoke or args.compare:
         eps = args.entries_per_shard or (1 << 14 if args.smoke else 1 << 18)
         mem = max(1 << 12, min(1 << 15, eps // 8))
         result = engine_compare(entries_per_shard=eps, shards=args.shards,
-                                batch=max(1 << 10, mem // 2), memtable=mem)
+                                batch=max(1 << 10, mem // 2), memtable=mem,
+                                repeats=args.repeats)
         result["mode"] = "smoke" if args.smoke else "compare"
         with open(args.out, "w") as f:
             json.dump(result, f, indent=1)

@@ -11,6 +11,9 @@ Column queries exercise the transpose-table routing.
 point-read latency of the fused single-dispatch LSM path vs the per-run
 baseline as the number of resident runs per shard grows (fig4 SVR/SVC
 latency is dispatch-bound, so fused wins once several runs are resident).
+``scan_read_compare`` is the range-scan A/B: one fused fence-to-fence
+dispatch per shard vs expanding the range into an id list of point
+queries (the pre-scan selector path), swept over range lengths.
 """
 from __future__ import annotations
 
@@ -156,15 +159,74 @@ def fused_read_compare(reps: int = 100, q_rows: int = 4,
     return result
 
 
+def scan_read_compare(reps: int = 30, lengths=(64, 256, 1024),
+                      out: str = None) -> dict:
+    """Range-scan A/B: the fused fence-to-fence scan dispatch
+    (``ShardedTable.scan_range``) vs id-list point expansion of the same
+    ``[lo, lo+len)`` range (``query_rows(arange(lo, hi))`` — exactly what
+    range selectors compiled to before the scan path existed). Emits
+    ``scan_rows`` for ``BENCH_query.json``; the CI gate tracks the
+    scan/point-expansion ratio."""
+    rng = np.random.default_rng(11)
+    st = _build_lsm_serving_state(4, True)   # levels + L0 runs + mem tail
+    resident = max(st._runs.resident_runs(s) for s in range(st.S))
+    present = np.asarray(st.scan_shard(0)[0])
+    result = {"scan_config": {"reps": reps,
+                              "resident_runs_per_shard": resident},
+              "scan_rows": []}
+    for length in lengths:
+        los = [int(present[int(i)]) for i in
+               rng.integers(0, max(len(present) - 1, 1), 8)]
+        los = [min(lo, (1 << 22) - length) for lo in los]
+        st.scan_range(los[0], los[0] + length)      # warm the jit caches
+        st.query_rows(np.arange(los[0], los[0] + length, dtype=np.int32))
+        d0 = st.engine_stats()["scan_dispatches"]
+        t0 = time.time()
+        for i in range(reps):
+            lo = los[i % len(los)]
+            st.scan_range(lo, lo + length)
+        scan_us = (time.time() - t0) / reps * 1e6
+        dispatches = (st.engine_stats()["scan_dispatches"] - d0) / reps
+        t0 = time.time()
+        for i in range(reps):
+            lo = los[i % len(los)]
+            st.query_rows(np.arange(lo, lo + length, dtype=np.int32))
+        point_us = (time.time() - t0) / reps * 1e6
+        row = {"range_len": length, "scan_us": scan_us,
+               "point_expansion_us": point_us,
+               "scan_speedup": point_us / scan_us,
+               "scan_dispatches_per_call": dispatches}
+        result["scan_rows"].append(row)
+        print(f"range_len={length:5d} scan={scan_us:9.1f}us "
+              f"point-expansion={point_us:10.1f}us "
+              f"speedup={row['scan_speedup']:6.2f}x "
+              f"dispatches/scan={dispatches:.2f}")
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {out}")
+    return result
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--fused-compare", action="store_true",
-                    help="read-path A/B only (BENCH_query.json artifact)")
+                    help="point-read A/B (BENCH_query.json artifact)")
+    ap.add_argument("--scan-compare", action="store_true",
+                    help="range-scan vs point-expansion A/B "
+                         "(scan_rows in BENCH_query.json)")
     ap.add_argument("--out", default="BENCH_query.json")
     ap.add_argument("--reps", type=int, default=100)
     args = ap.parse_args()
-    if args.fused_compare:
-        fused_read_compare(reps=args.reps, out=args.out)
+    if args.fused_compare or args.scan_compare:
+        result = {}
+        if args.fused_compare:
+            result.update(fused_read_compare(reps=args.reps))
+        if args.scan_compare:
+            result.update(scan_read_compare(reps=max(args.reps // 2, 10)))
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {args.out}")
     else:
         fig4()

@@ -125,6 +125,8 @@ class DBserver:
                  engine: str = "lsm",  # storage engine: "lsm" (leveled
                  # runs, db/lsm) or "single" (legacy one-run tablet)
                  fused_reads: bool = True,  # LSM point reads in one dispatch
+                 l0_slots: int = 4,   # LSM L0 runs per shard before a
+                 fanout: int = 4,     # major compaction; level growth rate
                  wal_root: str = None):  # durability root: each table logs
                  # to <wal_root>/<table>/, the shared key dictionary to
                  # <wal_root>/keydict.{json,log}
@@ -138,6 +140,8 @@ class DBserver:
         self.use_pallas = use_pallas
         self.engine = engine
         self.fused_reads = fused_reads
+        self.l0_slots = l0_slots
+        self.fanout = fanout
         self.keydict = StringDict()          # shared row/col key universe
         self._sorted_keys: Optional[np.ndarray] = None
         self.tables: dict = {}
@@ -200,6 +204,16 @@ class DBserver:
             self._sorted_ids = np.arange(len(keys), dtype=np.int32)[order]
         return self._sorted_keys, self._sorted_ids
 
+    def _span_ids(self, lo_key: str, hi_key: str) -> np.ndarray:
+        """Sorted dict ids of every key in the STRING range
+        [lo_key, hi_key] (both inclusive — the one searchsorted span both
+        the range and prefix selectors reduce to, shared by the id-list
+        and scan-plan resolvers so they can never disagree)."""
+        skeys, sids = self._snapshot()
+        lo = np.searchsorted(skeys, lo_key, side="left")
+        hi = np.searchsorted(skeys, hi_key, side="right")
+        return np.sort(sids[lo:hi]).astype(np.int32)
+
     def resolve_selector(self, sel) -> Optional[np.ndarray]:
         """D4M selector -> row ids; None means 'all' (full scan).
 
@@ -211,18 +225,12 @@ class DBserver:
             return None
         toks = split_str(sel) if isinstance(sel, str) else np.asarray(
             [str(t) for t in np.asarray(sel).ravel()], dtype=object)
-        skeys, sids = self._snapshot()
         if len(toks) == 3 and toks[1] == ":":
-            lo = np.searchsorted(skeys, toks[0], side="left")
-            hi = np.searchsorted(skeys, toks[2], side="right")
-            return np.sort(sids[lo:hi])
+            return self._span_ids(toks[0], toks[2])
         out = []
         for t in toks:
             if t.endswith("*"):
-                pre = t[:-1]
-                lo = np.searchsorted(skeys, pre, side="left")
-                hi = np.searchsorted(skeys, pre + "￿", side="right")
-                out.append(sids[lo:hi])
+                out.append(self._span_ids(t[:-1], t[:-1] + "￿"))
             else:
                 i = self.keydict.get(t)
                 if i >= 0:
@@ -230,6 +238,55 @@ class DBserver:
         if not out:
             return np.zeros(0, dtype=np.int32)
         return np.unique(np.concatenate(out))
+
+    # a dict-range id set denser than this scans the covering id range in
+    # one fused dispatch and filters the stragglers on the host; sparser
+    # sets fall back to batched point queries
+    RANGE_SCAN_DENSITY = 0.5
+
+    def resolve_selector_plan(self, sel):
+        """D4M selector -> read plan, WITHOUT materializing an id list
+        when a server-side range scan can serve it (Accumulo scans string
+        ranges tablet-side; ``T["a,:,c,", :]`` should not expand to
+        O(range) point queries).
+
+        Returns one of::
+
+            ("all", None)              full scan
+            ("ids", ids)               batched point queries (fallback)
+            ("range", (lo, hi, filt))  contiguous id-range scan [lo, hi);
+                                       ``filt`` is None when the dict ids
+                                       inside the string range are exactly
+                                       [lo, hi) (scan alone answers), else
+                                       the sorted id subset to keep after
+                                       a dense-superset scan
+
+        Range/prefix selectors map through the key dictionary's sorted-key
+        snapshot: the matching ids are contiguous whenever keys were
+        interned in lexicographic order (sorted ingest, the common D4M
+        bulk-load shape) — then the scan needs no id list at all.
+        """
+        if sel is None or sel == ":" or (isinstance(sel, slice)
+                                         and sel == slice(None)):
+            return ("all", None)
+        toks = split_str(sel) if isinstance(sel, str) else np.asarray(
+            [str(t) for t in np.asarray(sel).ravel()], dtype=object)
+        span_ids = None
+        if len(toks) == 3 and toks[1] == ":":
+            span_ids = self._span_ids(toks[0], toks[2])
+        elif len(toks) == 1 and toks[0].endswith("*"):
+            span_ids = self._span_ids(toks[0][:-1], toks[0][:-1] + "￿")
+        if span_ids is None:
+            return ("ids", self.resolve_selector(sel))
+        if len(span_ids) == 0:
+            return ("ids", span_ids)
+        lo_id, hi_id = int(span_ids[0]), int(span_ids[-1]) + 1
+        span = hi_id - lo_id
+        if span == len(span_ids):
+            return ("range", (lo_id, hi_id, None))
+        if len(span_ids) >= self.RANGE_SCAN_DENSITY * span:
+            return ("range", (lo_id, hi_id, span_ids))
+        return ("ids", span_ids)
 
 
 class Table:
@@ -247,6 +304,8 @@ class Table:
             combiner=combiner, use_pallas=server.use_pallas,
             engine=getattr(server, "engine", "lsm"),
             fused_reads=getattr(server, "fused_reads", True),
+            l0_slots=getattr(server, "l0_slots", 4),
+            fanout=getattr(server, "fanout", 4),
             wal_dir=wal_dir)
         self.valdict: Optional[StringDict] = None  # set on first string put
         self._valdict_journal: Optional[_DictJournal] = None
@@ -342,12 +401,18 @@ class Table:
     def __getitem__(self, key) -> Assoc:
         self._check_live()
         rsel, csel = key
-        rids = self.server.resolve_selector(rsel)
+        kind, arg = self.server.resolve_selector_plan(rsel)
         cids = self.server.resolve_selector(csel)
-        if rids is None:  # full scan (optionally filtered by column)
+        if kind == "all":  # full scan (optionally filtered by column)
             r, c, v = self.store.scan()
+        elif kind == "range":  # contiguous rows: ONE scan per shard, no
+            lo, hi, filt = arg  # id-list point expansion
+            r, c, v = self.store.scan_range(lo, hi)
+            if filt is not None:  # dense superset: drop dict-absent ids
+                keep = np.isin(r, filt)
+                r, c, v = r[keep], c[keep], v[keep]
         else:
-            r, c, v = self.store.query_rows(rids)
+            r, c, v = self.store.query_rows(arg)
         if cids is not None:  # single tables filter columns client-side;
             keep = np.isin(c, cids)  # TablePair routes to the transpose table
             r, c, v = r[keep], c[keep], v[keep]

@@ -359,7 +359,7 @@ class ShardedTable:
         """Observability: flush/compaction counts and bloom skip rates."""
         if self.engine == "lsm":
             st = dict(self._runs.stats)
-            st["l0_used"] = self._runs.l0_used
+            st["l0_used"] = [int(x) for x in self._runs.l0_used]
             st["level_entries"] = [int(lv["n"].sum())
                                    for lv in self._runs.levels]
             return st
@@ -591,6 +591,67 @@ class ShardedTable:
                 out_r.append(q[qi])
                 out_c.append(cols[qi, ki])
                 out_v.append(vals[qi, ki])
+        if not out_r:
+            z = np.zeros(0, np.int32)
+            return z, z.copy(), np.zeros(0, np.float32)
+        return (np.concatenate(out_r), np.concatenate(out_c),
+                np.concatenate(out_v))
+
+    def scan_range(self, lo: int, hi: int, width: int = 64):
+        """Row-range scan: all (row, col, val) with ``lo <= row < hi``,
+        sorted lex by (row, col) per shard — the server-side analogue of an
+        Accumulo tablet range scan.
+
+        LSM + ``fused_reads``: each overlapping shard is answered by ONE
+        fused fence-to-fence dispatch (``scan_shard_fused``) — no id-list
+        point expansion. With ``fused_reads`` off the per-shard full scan
+        is filtered on the host (the A/B baseline); the legacy single-run
+        engine flushes and slices its sorted run by the endpoint ranks."""
+        self._check_open()
+        lo, hi = int(lo), int(hi)
+        out_r, out_c, out_v = [], [], []
+        if hi > lo:
+            s_lo = int(shard_of(np.asarray([lo]), self.S, self.id_capacity)[0])
+            s_hi = int(shard_of(np.asarray([max(hi - 1, lo)]), self.S,
+                                self.id_capacity)[0])
+            if self.engine != "lsm":
+                if self._mem_n[s_lo:s_hi + 1].max(initial=0) > 0:
+                    self.flush()
+            for s in range(s_lo, s_hi + 1):
+                if self.engine == "lsm":
+                    mem_n = int(self._mem_n[s])
+                    mh = self._mem_host(s)
+                    if self.fused_reads:
+                        mem_sorted = False
+                        if mem_n == 0:
+                            fmem = None
+                        elif mh is not None:
+                            fmem = self._mem_host_sorted(int(s))
+                            mem_sorted = True
+                        else:  # mirror stale: slice device buffers (lazy)
+                            fmem = (self._mem_r[s, :mem_n],
+                                    self._mem_c[s, :mem_n],
+                                    self._mem_v[s, :mem_n])
+                        r, c, v = self._runs.scan_shard_fused(
+                            int(s), lo, hi, mem_host=fmem, width=width,
+                            mem_sorted=mem_sorted)
+                    else:  # baseline: full shard scan + host range filter
+                        r, c, v = self.scan_shard(s)
+                        keep = (r >= lo) & (r < hi)
+                        r, c, v = r[keep], c[keep], v[keep]
+                else:  # legacy single run: endpoint ranks on the host copy
+                    t = self._shard_views.get(int(s))
+                    if t is None:
+                        t = jax.tree.map(lambda x: x[s], self.tablets)
+                        self._shard_views[int(s)] = t
+                    rows = np.asarray(t.rows)
+                    a = int(np.searchsorted(rows, lo, side="left"))
+                    b = int(np.searchsorted(rows, hi, side="left"))
+                    r = rows[a:b]
+                    c = np.asarray(t.cols)[a:b]
+                    v = np.asarray(t.vals)[a:b]
+                if len(r):
+                    out_r.append(r); out_c.append(c); out_v.append(v)
         if not out_r:
             z = np.zeros(0, np.int32)
             return z, z.copy(), np.zeros(0, np.float32)

@@ -49,7 +49,8 @@ import numpy as np
 
 from ...kernels.common import I32_MAX, INTERPRET
 from ...kernels.merge_rank import kway_merge
-from ...kernels.sorted_search import sorted_search_batched
+from ...kernels.sorted_search import (sorted_search_batched,
+                                      sorted_search_endpoints)
 from .bloom import (BITS_PER_KEY, MAX_HASHES, NUM_HASHES, bloom_build,
                     bloom_maybe_contains, bloom_maybe_contains_batch,
                     fence_build, num_words)
@@ -139,12 +140,18 @@ def _bloom_rebuild_fn(n_words: int, n_hashes: int, nested: bool):
 
 @functools.lru_cache(maxsize=None)
 def _write_slot_fn():
-    """Write a flushed run into L0 slot ``slot`` (traced scalar)."""
+    """Write each shard's flushed run into ITS next free L0 slot
+    (``slot`` is a traced [S] vector — shards fill independently). A shard
+    whose slot index equals K0 (full L0, nothing incoming) drops the
+    write."""
 
     def write(l0_r, l0_c, l0_v, l0_b, l0_f, rr, cc, vv, bb, ff, slot):
-        return (l0_r.at[:, slot].set(rr), l0_c.at[:, slot].set(cc),
-                l0_v.at[:, slot].set(vv), l0_b.at[:, slot].set(bb),
-                l0_f.at[:, slot].set(ff))
+        s = jnp.arange(l0_r.shape[0])
+        return (l0_r.at[s, slot].set(rr, mode="drop"),
+                l0_c.at[s, slot].set(cc, mode="drop"),
+                l0_v.at[s, slot].set(vv, mode="drop"),
+                l0_b.at[s, slot].set(bb, mode="drop"),
+                l0_f.at[s, slot].set(ff, mode="drop"))
 
     return jax.jit(write)
 
@@ -389,6 +396,148 @@ def _fused_query_fn(combiner: str, level_blocks: Tuple[int, ...],
     return jax.jit(fused)
 
 
+@functools.lru_cache(maxsize=None)
+def _fused_scan_fn(combiner: str, level_blocks: Tuple[int, ...], b0: int,
+                   width: int, mem_mode: str, id_capacity: int,
+                   use_pallas: bool):
+    """Build THE single-dispatch range scan: a ``[lo, hi)`` row-range over
+    one shard's resident leveled runs (deepest first), used L0 slots, and
+    (optionally) memtable tail, answered inside one ``jax.jit``.
+
+    Both endpoints are fence-bracketed exactly like the point path — rank
+    ``lo`` and ``hi`` with ``side='left'`` (``hi`` exclusive), so each run
+    contributes the contiguous candidate window ``[start, end)``. Under
+    ``use_pallas`` the fence ranks go through the batched Pallas
+    ``sorted_search`` kernel (the L0 stack in one launch, each level as a
+    1-row batch). Per-run windows of static ``width`` are gathered into a
+    ``[runs, width]`` candidate block; ``cnt_max`` > width signals the
+    host to re-dispatch wider (batch-scanner semantics).
+
+    The on-device merge-dedup sorts all candidates by ``(row, col, age)``
+    and reduces equal-(row, col) groups with the combiner. Sort strategy
+    by static key geometry (``kbits`` = id bits, ``abits`` = age bits):
+
+    * ``2*kbits + abits <= 30``: ONE packed int32 key — XLA:CPU's fast
+      single-key sort, same trick as the point path;
+    * ``kbits + abits <= 31`` (the common 2^22-id config): (col, age)
+      packs into one int32 and two STABLE single-key sorts (secondary
+      then primary) implement the lexicographic order — still ~2 fast
+      sorts instead of one ~10x-slower comparator sort;
+    * else: a 3-key comparator sort (correctness fallback).
+
+    Returns (rows[W], cols[W], vals[W], keep[W], cnt_max) with
+    W = n_runs * width; kept entries are the combined triples sorted lex
+    by (row, col).
+    """
+    from ..kvstore import _dedup_combine
+
+    n_levels = len(level_blocks)
+
+    def fused(lohi, levels, l0, mem):
+        iota = jnp.arange(width, dtype=jnp.int32)
+        seg_r, seg_c, seg_v, seg_ok, seg_age, cnts = [], [], [], [], [], []
+
+        def bracket(rows, f_ranks, block):
+            cap = rows.shape[0]
+            w = block + 1
+
+            def one(qi, fi):
+                base = jnp.clip(jnp.maximum(fi - 1, 0) * block, 0, cap - w)
+                win = jax.lax.dynamic_slice(rows, (base,), (w,))
+                return (base + jnp.searchsorted(win, qi, side="left")
+                        ).astype(jnp.int32)
+
+            return one(lohi[0], f_ranks[0]), one(lohi[1], f_ranks[1])
+
+        def window(rows, cols, vals, start, end, age):
+            idx = start + iota
+            idxc = jnp.clip(idx, 0, rows.shape[0] - 1)
+            seg_r.append(rows[idxc])
+            seg_c.append(cols[idxc])
+            seg_v.append(vals[idxc])
+            seg_ok.append(idx < end)
+            seg_age.append(age)
+            cnts.append(end - start)
+
+        # leveled runs, deepest (oldest) first — ages 1..L
+        for i, (rows, cols, vals, fence, _bloom) in enumerate(levels):
+            if use_pallas:
+                flo, fhi = sorted_search_endpoints(fence[None], lohi,
+                                                   interpret=INTERPRET)
+                fr = jnp.stack([flo[0], fhi[0]])
+            else:
+                fr = jnp.searchsorted(fence, lohi, side="left"
+                                      ).astype(jnp.int32)
+            start, end = bracket(rows, fr, level_blocks[i])
+            window(rows, cols, vals, start, end, i + 1)
+        # the used L0 slots — ages L+1..L+K0
+        l0_rows, l0_cols, l0_vals, l0_fence, _l0_bloom = l0
+        k0 = l0_rows.shape[0]
+        if k0:
+            if use_pallas:
+                flo0, fhi0 = sorted_search_endpoints(l0_fence, lohi,
+                                                     interpret=INTERPRET)
+                fr0 = jnp.stack([flo0, fhi0], axis=1)
+            else:
+                fr0 = jnp.stack([jnp.searchsorted(l0_fence[k], lohi,
+                                                  side="left")
+                                 .astype(jnp.int32) for k in range(k0)])
+            for k in range(k0):
+                start, end = bracket(l0_rows[k], fr0[k], b0)
+                window(l0_rows[k], l0_cols[k], l0_vals[k], start, end,
+                       n_levels + 1 + k)
+        # the memtable tail (newest) — no fence metadata, direct ranks
+        if mem_mode != "none":
+            mem_r, mem_c, mem_v = mem
+            if mem_mode == "raw":
+                mem_r, mem_c, mem_v, _ = _sort_dedup(mem_r, mem_c, mem_v,
+                                                     combiner)
+            start = jnp.searchsorted(mem_r, lohi[0], side="left"
+                                     ).astype(jnp.int32)
+            end = jnp.searchsorted(mem_r, lohi[1], side="left"
+                                   ).astype(jnp.int32)
+            window(mem_r, mem_c, mem_v, start, end, n_levels + k0 + 1)
+        # flat [W] candidate block, W = n_runs * width
+        rows_all = jnp.concatenate(seg_r)
+        cols_all = jnp.concatenate(seg_c)
+        vals_all = jnp.concatenate(seg_v)
+        ok_all = jnp.concatenate(seg_ok)
+        ages = jnp.concatenate([jnp.full((width,), a, jnp.int32)
+                                for a in seg_age])
+        abits = (len(seg_age) + 1).bit_length()
+        kbits = max((id_capacity - 1).bit_length(), 1)
+        if 2 * kbits + abits <= 30:
+            key = jnp.where(ok_all, (rows_all << (kbits + abits))
+                            + (cols_all << abits) + ages, I32_MAX)
+            key_s, val_s = jax.lax.sort((key, vals_all), dimension=0,
+                                        num_keys=1)
+            pad = key_s == I32_MAX
+            row_s = jnp.where(pad, I32_MAX, key_s >> (kbits + abits))
+            col_s = jnp.where(pad, I32_MAX,
+                              (key_s >> abits) & ((1 << kbits) - 1))
+        elif kbits + abits <= 31:
+            row_m = jnp.where(ok_all, rows_all, I32_MAX)
+            key2 = jnp.where(ok_all, (cols_all << abits) + ages, I32_MAX)
+            k2_s, row_1, val_1 = jax.lax.sort(
+                (key2, row_m, vals_all), dimension=0, num_keys=1,
+                is_stable=True)
+            row_s, k2_f, val_s = jax.lax.sort(
+                (row_1, k2_s, val_1), dimension=0, num_keys=1,
+                is_stable=True)
+            pad = row_s == I32_MAX
+            col_s = jnp.where(pad, I32_MAX, k2_f >> abits)
+        else:
+            row_m = jnp.where(ok_all, rows_all, I32_MAX)
+            col_m = jnp.where(ok_all, cols_all, I32_MAX)
+            row_s, col_s, _, val_s = jax.lax.sort(
+                (row_m, col_m, ages, vals_all), dimension=0, num_keys=3)
+        keep, out_v = _dedup_combine(row_s, col_s, val_s, combiner)
+        cnt_max = jnp.max(jnp.stack(cnts))
+        return row_s, col_s, jnp.where(keep, out_v, 0.0), keep, cnt_max
+
+    return jax.jit(fused)
+
+
 def combine_triples(r: np.ndarray, c: np.ndarray, v: np.ndarray,
                     age: np.ndarray, combiner: str):
     """Host-side cross-run combine: sort candidates by (row, col, age) and
@@ -415,6 +564,28 @@ def combine_triples(r: np.ndarray, c: np.ndarray, v: np.ndarray,
     else:
         raise ValueError(f"unknown combiner {combiner!r}")
     return r[starts], c[starts], vv.astype(np.float32)
+
+
+def _prep_mem(mem_host: Optional[Tuple], mem_sorted: bool):
+    """Pad an unflushed memtable tail to a jit-stable bucket and pick the
+    in-dispatch treatment: ``"sorted"`` = host pre-sorted/deduped mirror,
+    ``"raw"`` = sort in-dispatch (stale-mirror/device path), ``"none"``."""
+    mem_n = 0 if mem_host is None else len(mem_host[0])
+    if not mem_n:
+        return None, "none"
+    mb = _bucket(mem_n)
+    mr, mc, mv = mem_host
+    if isinstance(mr, np.ndarray):
+        pr = np.full(mb, I32_MAX, np.int32)
+        pc = np.full(mb, I32_MAX, np.int32)
+        pv = np.zeros(mb, np.float32)
+        pr[:mem_n], pc[:mem_n], pv[:mem_n] = mr, mc, mv
+        return (pr, pc, pv), ("sorted" if mem_sorted else "raw")
+    # device arrays: pad lazily, stays async
+    pad = mb - mem_n
+    return (jnp.pad(mr, (0, pad), constant_values=I32_MAX),
+            jnp.pad(mc, (0, pad), constant_values=I32_MAX),
+            jnp.pad(mv, (0, pad))), "raw"
 
 
 # ------------------------------------------------------------------ engine
@@ -468,7 +639,10 @@ class LSMRuns:
         # host-side row ranges per run: skip runs without device roundtrips
         self.l0_min = np.full((S, K0), I32_MAX, np.int64)
         self.l0_max = np.full((S, K0), -1, np.int64)
-        self.l0_used = 0
+        # per-SHARD used-slot counts: shards fill (and major-compact) their
+        # own L0 independently — one hot shard no longer drags its peers
+        # through a lockstep merge (ROADMAP "Leveled compaction tuning")
+        self.l0_used = np.zeros((S,), np.int64)
         self.levels: List[dict] = []
         for i, cap in enumerate(self.level_caps):
             w = num_words(cap, self.bloom_bits[i])
@@ -486,10 +660,12 @@ class LSMRuns:
                 "maxr": np.full((S,), -1, np.int64),
             })
         # read-path observability (tests assert blooms actually skip work
-        # and that the fused path really is one dispatch per point read)
+        # and that the fused path really is one dispatch per point read /
+        # range scan)
         self.stats = {"flushes": 0, "major_compactions": 0,
                       "runs_probed": 0, "runs_skipped": 0,
-                      "fused_dispatches": 0, "fused_widen_retries": 0}
+                      "fused_dispatches": 0, "fused_widen_retries": 0,
+                      "scan_dispatches": 0, "scan_widen_retries": 0}
         # per-run sliced views of the stacked arrays (slicing copies ~MBs
         # eagerly per query otherwise); invalidated on flush/compaction.
         # Fused-path entries key ("fused", s) and hold the level tuple +
@@ -504,7 +680,7 @@ class LSMRuns:
             self.combiner, self._w0, self._b0, self._h0)(mem_r, mem_c, mem_v)
         _write_slot_fn()(self.l0_rows, self.l0_cols, self.l0_vals,
                          self.l0_bloom, self.l0_fence, rr, cc, vv, bb, ff,
-                         jnp.asarray(0, jnp.int32))
+                         jnp.zeros((self.S,), jnp.int32))
         for d, lv in enumerate(self.levels):
             lvls = tuple((self.levels[i]["rows"], self.levels[i]["cols"],
                           self.levels[i]["vals"]) for i in range(d, -1, -1))
@@ -516,45 +692,63 @@ class LSMRuns:
     # ----------------------------------------------------------- write path
     def flush_memtable(self, mem_r, mem_c, mem_v) -> None:
         """Minor compaction: memtable -> one L0 run per shard, O(m log m).
-        Triggers a major compaction when L0 is full. May raise
-        OverflowError (capacity back-pressure, like the legacy engine)."""
-        if self.l0_used == self.K0:
-            self.major_compact()
+        Shards whose OWN L0 is full (and that actually have data to flush)
+        are major-compacted first — peers keep their L0 runs untouched.
+        May raise OverflowError (capacity back-pressure, like the legacy
+        engine)."""
         rr, cc, vv, n, bb, ff, mn, mx = _flush_fn(
             self.combiner, self._w0, self._b0, self._h0)(mem_r, mem_c, mem_v)
+        n_host = np.asarray(n).astype(np.int64)
+        landing = n_host > 0          # shards receiving a non-empty run
+        full = (self.l0_used >= self.K0) & landing
+        if full.any():
+            self.major_compact(mask=full)
+        slot = self.l0_used.copy()    # per-shard next free slot (K0 = drop)
         (self.l0_rows, self.l0_cols, self.l0_vals, self.l0_bloom,
          self.l0_fence) = _write_slot_fn()(
             self.l0_rows, self.l0_cols, self.l0_vals, self.l0_bloom,
             self.l0_fence, rr, cc, vv, bb, ff,
-            jnp.asarray(self.l0_used, jnp.int32))
-        self.l0_n[:, self.l0_used] = np.asarray(n)
-        self.l0_min[:, self.l0_used] = np.asarray(mn)
-        self.l0_max[:, self.l0_used] = np.asarray(mx)
+            jnp.asarray(slot, jnp.int32))
+        sidx = np.flatnonzero(landing)
+        self.l0_n[sidx, slot[sidx]] = n_host[sidx]
+        self.l0_min[sidx, slot[sidx]] = np.asarray(mn).astype(np.int64)[sidx]
+        self.l0_max[sidx, slot[sidx]] = np.asarray(mx).astype(np.int64)[sidx]
         # all L0 slot views (and the fused stacked views, which embed the
         # L0 stack) alias the re-written arrays; drop them
         self._view_cache = {k: v for k, v in self._view_cache.items()
                             if k[0] not in ("l0", "fused")}
-        self.l0_used += 1
+        self.l0_used = self.l0_used + landing.astype(np.int64)
         self.stats["flushes"] += 1
-        if self.l0_used == self.K0:
-            self.major_compact()
+        full = self.l0_used >= self.K0
+        if full.any():
+            self.major_compact(mask=full)
 
-    def _pick_depth(self) -> int:
+    def _pick_depth(self, mask: np.ndarray) -> int:
         """Smallest level whose capacity bounds the (pre-dedup) merge size
-        for every shard; the deepest level is the fallback."""
+        for every COMPACTING shard; the deepest level is the fallback."""
         bound = self.l0_n.sum(axis=1)  # [S]
         for d, lv in enumerate(self.levels):
             bound = bound + lv["n"]
-            if int(bound.max()) <= lv["cap"]:
+            if int(bound[mask].max()) <= lv["cap"]:
                 return d
         return len(self.levels) - 1
 
-    def major_compact(self) -> None:
-        """Size-triggered major compaction: k-way merge all L0 runs and
-        levels 1..d into level d (Pallas merge_rank under ``use_pallas``)."""
-        if self.l0_used == 0:
+    def major_compact(self, mask: Optional[np.ndarray] = None) -> None:
+        """Size-triggered major compaction: k-way merge the L0 runs and
+        levels 1..d into level d (Pallas merge_rank under ``use_pallas``).
+
+        ``mask`` selects WHICH shards compact (default: every shard with
+        L0 data). The merge itself stays one vmapped dispatch over all S
+        shards (static shapes); unmasked shards' merged output is simply
+        discarded — their runs, counts, and L0 slots are untouched, so a
+        single hot shard filling its L0 no longer forces a lockstep merge
+        of every peer."""
+        if mask is None:
+            mask = self.l0_used > 0
+        mask = np.asarray(mask, bool)
+        if not mask.any():
             return
-        d = self._pick_depth()
+        d = self._pick_depth(mask)
         target = self.levels[d]
         # deepest first = oldest first (kway_merge contract)
         lvls = tuple((self.levels[i]["rows"], self.levels[i]["cols"],
@@ -564,33 +758,46 @@ class LSMRuns:
             target["block"], target["hashes"])(
             self.l0_rows, self.l0_cols, self.l0_vals, lvls)
         n_host = np.asarray(n)
-        if d == len(self.levels) - 1 and int(n_host.max()) > self.cap:
+        if d == len(self.levels) - 1 and int(n_host[mask].max()) > self.cap:
             raise OverflowError(
-                f"LSM shard overflow: {int(n_host.max())} > {self.cap}")
-        target.update(rows=rr, cols=cc, vals=vv, bloom=bb, fence=ff,
-                      n=n_host.astype(np.int64),
-                      minr=np.asarray(mn).astype(np.int64),
-                      maxr=np.asarray(mx).astype(np.int64))
-        S, K0, m = self.S, self.K0, self.mem_cap
-        self.l0_rows = jnp.full((S, K0, m), I32_MAX, jnp.int32)
-        self.l0_cols = jnp.full((S, K0, m), I32_MAX, jnp.int32)
-        self.l0_vals = jnp.zeros((S, K0, m), jnp.float32)
-        self.l0_bloom = jnp.zeros((S, K0, self._w0), jnp.uint32)
-        self.l0_fence = jnp.full_like(self.l0_fence, I32_MAX)
-        self.l0_n[:] = 0
-        self.l0_min[:] = I32_MAX
-        self.l0_max[:] = -1
-        self.l0_used = 0
+                f"LSM shard overflow: {int(n_host[mask].max())} > {self.cap}")
+        m_dev = jnp.asarray(mask)
+
+        def sel(new, old):
+            m = m_dev.reshape((-1,) + (1,) * (new.ndim - 1))
+            return jnp.where(m, new, old)
+
+        target.update(
+            rows=sel(rr, target["rows"]), cols=sel(cc, target["cols"]),
+            vals=sel(vv, target["vals"]), bloom=sel(bb, target["bloom"]),
+            fence=sel(ff, target["fence"]),
+            n=np.where(mask, n_host, target["n"]).astype(np.int64),
+            minr=np.where(mask, np.asarray(mn),
+                          target["minr"]).astype(np.int64),
+            maxr=np.where(mask, np.asarray(mx),
+                          target["maxr"]).astype(np.int64))
+        # clear L0 + the shallower levels for the compacted shards ONLY
+        m3 = m_dev[:, None, None]
+        self.l0_rows = jnp.where(m3, jnp.int32(I32_MAX), self.l0_rows)
+        self.l0_cols = jnp.where(m3, jnp.int32(I32_MAX), self.l0_cols)
+        self.l0_vals = jnp.where(m3, jnp.float32(0.0), self.l0_vals)
+        self.l0_bloom = jnp.where(m3, jnp.uint32(0), self.l0_bloom)
+        self.l0_fence = jnp.where(m3, jnp.int32(I32_MAX), self.l0_fence)
+        self.l0_n[mask] = 0
+        self.l0_min[mask] = I32_MAX
+        self.l0_max[mask] = -1
+        self.l0_used[mask] = 0
+        m2 = m_dev[:, None]
         for i in range(d):
             lv = self.levels[i]
-            lv["rows"] = jnp.full_like(lv["rows"], I32_MAX)
-            lv["cols"] = jnp.full_like(lv["cols"], I32_MAX)
-            lv["vals"] = jnp.zeros_like(lv["vals"])
-            lv["bloom"] = jnp.zeros_like(lv["bloom"])
-            lv["fence"] = jnp.full_like(lv["fence"], I32_MAX)
-            lv["n"][:] = 0
-            lv["minr"][:] = I32_MAX
-            lv["maxr"][:] = -1
+            lv["rows"] = jnp.where(m2, jnp.int32(I32_MAX), lv["rows"])
+            lv["cols"] = jnp.where(m2, jnp.int32(I32_MAX), lv["cols"])
+            lv["vals"] = jnp.where(m2, jnp.float32(0.0), lv["vals"])
+            lv["bloom"] = jnp.where(m2, jnp.uint32(0), lv["bloom"])
+            lv["fence"] = jnp.where(m2, jnp.int32(I32_MAX), lv["fence"])
+            lv["n"][mask] = 0
+            lv["minr"][mask] = I32_MAX
+            lv["maxr"][mask] = -1
         self._view_cache.clear()
         self.stats["major_compactions"] += 1
 
@@ -598,7 +805,7 @@ class LSMRuns:
     def resident_runs(self, s: int) -> int:
         """How many non-empty runs shard ``s`` holds (levels + L0)."""
         n = sum(1 for lv in self.levels if lv["n"][s])
-        n += sum(1 for k in range(self.l0_used) if self.l0_n[s, k])
+        n += sum(1 for k in range(int(self.l0_used[s])) if self.l0_n[s, k])
         return n
 
     def _iter_runs_oldest_first(self, s: int):
@@ -617,7 +824,7 @@ class LSMRuns:
                 yield view + (int(lv["n"][s]), lv["block"],
                               int(lv["minr"][s]), int(lv["maxr"][s]),
                               lv["hashes"])
-        for k in range(self.l0_used):
+        for k in range(int(self.l0_used[s])):
             if self.l0_n[s, k]:
                 key = ("l0", k, s)
                 view = self._view_cache.get(key)
@@ -651,7 +858,7 @@ class LSMRuns:
                 for i in live)
             blocks = tuple(self.levels[i]["block"] for i in live)
             hashes = tuple(self.levels[i]["hashes"] for i in live)
-            u = self.l0_used
+            u = int(self.l0_used[s])
             l0 = (self.l0_rows[s, :u], self.l0_cols[s, :u],
                   self.l0_vals[s, :u], self.l0_fence[s, :u],
                   self.l0_bloom[s, :u])
@@ -675,24 +882,7 @@ class LSMRuns:
         n_q = len(q)
         q_pad = np.full(_bucket(n_q), -1, np.int32)  # -1: matches nothing
         q_pad[:n_q] = q
-        mem_n = 0 if mem_host is None else len(mem_host[0])
-        mem, mem_mode = None, "none"
-        if mem_n:
-            mb = _bucket(mem_n)
-            mr, mc, mv = mem_host
-            if isinstance(mr, np.ndarray):
-                pr = np.full(mb, I32_MAX, np.int32)
-                pc = np.full(mb, I32_MAX, np.int32)
-                pv = np.zeros(mb, np.float32)
-                pr[:mem_n], pc[:mem_n], pv[:mem_n] = mr, mc, mv
-                mem = (pr, pc, pv)
-                mem_mode = "sorted" if mem_sorted else "raw"
-            else:  # device arrays: pad lazily, stays async
-                pad = mb - mem_n
-                mem = (jnp.pad(mr, (0, pad), constant_values=I32_MAX),
-                       jnp.pad(mc, (0, pad), constant_values=I32_MAX),
-                       jnp.pad(mv, (0, pad)))
-                mem_mode = "raw"
+        mem, mem_mode = _prep_mem(mem_host, mem_sorted)
         levels, blocks, hashes, live, l0 = self._fused_views(s)
         n_runs = len(levels) + int(l0[0].shape[0]) + (mem_mode != "none")
         # single-int32 (col, age) key packing needs col * age_pad headroom
@@ -719,7 +909,7 @@ class LSMRuns:
         # observability: hits = [resident levels deepest-first, used slots]
         for i in range(len(live)):
             self.stats["runs_probed" if hits[i] else "runs_skipped"] += 1
-        for k in range(self.l0_used):
+        for k in range(int(self.l0_used[s])):
             if self.l0_n[s, k]:
                 self.stats["runs_probed" if hits[len(live) + k]
                            else "runs_skipped"] += 1
@@ -727,6 +917,62 @@ class LSMRuns:
         qi, ki = np.nonzero(keep)
         return (q[qi].astype(np.int32), cols_s[:n_q][qi, ki],
                 vals_s[:n_q][qi, ki])
+
+    def scan_shard_fused(self, s: int, lo: int, hi: int,
+                         mem_host: Optional[Tuple] = None,
+                         width: int = 64, mem_sorted: bool = False):
+        """Row-range scan ``[lo, hi)`` of one shard in ONE jitted dispatch
+        + ONE host sync: every resident leveled run, used L0 slot, and the
+        memtable tail is fence-bracketed at both endpoints and the
+        candidate windows are merged-deduped on-device (the read-path
+        analogue of the fused point query — no per-run dispatches, no
+        id-list point expansion). ``width`` is the initial per-run window;
+        a run whose range slice overflows it triggers ONE widen retry at
+        the next pow2 ≥ the true max slice. Returns combined
+        (rows, cols, vals) sorted lex by (row, col). NO flush happens."""
+        lo, hi = int(lo), int(hi)
+        empty = (np.zeros(0, np.int32), np.zeros(0, np.int32),
+                 np.zeros(0, np.float32))
+        mem, mem_mode = _prep_mem(mem_host, mem_sorted)
+        if hi <= lo:
+            return empty
+        # host run-range metadata: skip the dispatch entirely when no
+        # resident run (and no memtable tail) intersects [lo, hi)
+        inter = mem_mode != "none"
+        if not inter:
+            for lv in self.levels:
+                if lv["n"][s] and lv["minr"][s] < hi and lv["maxr"][s] >= lo:
+                    inter = True
+                    break
+        if not inter:
+            for k in range(int(self.l0_used[s])):
+                if (self.l0_n[s, k] and self.l0_min[s, k] < hi
+                        and self.l0_max[s, k] >= lo):
+                    inter = True
+                    break
+        if not inter:
+            return empty
+        levels, blocks, hashes, live, l0 = self._fused_views(s)
+        if not levels and not int(l0[0].shape[0]) and mem_mode == "none":
+            return empty
+        lohi = jnp.asarray(np.asarray([lo, hi], np.int32))
+        w = _bucket(width, lo=16)
+        fn = _fused_scan_fn(self.combiner, blocks, self._b0, w, mem_mode,
+                            self.id_capacity, self.use_pallas)
+        self.stats["scan_dispatches"] += 1
+        out = fn(lohi, levels, l0, mem)
+        rows_s, cols_s, vals_s, keep, cnt_max = (np.asarray(x) for x in out)
+        if int(cnt_max) > w:  # widen + retry (batch-scanner semantics)
+            self.stats["scan_widen_retries"] += 1
+            self.stats["scan_dispatches"] += 1
+            fn = _fused_scan_fn(self.combiner, blocks, self._b0,
+                                _bucket(int(cnt_max)), mem_mode,
+                                self.id_capacity, self.use_pallas)
+            out = fn(lohi, levels, l0, mem)
+            rows_s, cols_s, vals_s, keep, _ = (np.asarray(x) for x in out)
+        ki = np.flatnonzero(keep)
+        return (rows_s[ki].astype(np.int32), cols_s[ki].astype(np.int32),
+                vals_s[ki].astype(np.float32))
 
     def query_shard(self, s: int, q: np.ndarray, mem_r, mem_c, mem_v,
                     mem_n: int, max_return: int,
@@ -828,7 +1074,7 @@ class LSMRuns:
             "l0_cols": np.asarray(self.l0_cols),
             "l0_vals": np.asarray(self.l0_vals),
             "l0_n": self.l0_n.copy(),
-            "l0_used": np.asarray(self.l0_used),
+            "l0_used": self.l0_used.copy(),
         }
         for i, lv in enumerate(self.levels):
             out[f"lvl{i}_rows"] = np.asarray(lv["rows"])
@@ -846,7 +1092,12 @@ class LSMRuns:
         self.l0_cols = jnp.asarray(arrs["l0_cols"])
         self.l0_vals = jnp.asarray(arrs["l0_vals"])
         self.l0_n = np.asarray(arrs["l0_n"]).astype(np.int64)
-        self.l0_used = int(arrs["l0_used"])
+        lu = np.asarray(arrs["l0_used"])
+        # pre-PR-3 snapshots persisted ONE scalar (lockstep slot counter);
+        # broadcast it — every shard then reports the same used count, and
+        # empty slots below it stay inert I32_MAX padding as before
+        self.l0_used = (np.full((self.S,), int(lu), np.int64)
+                        if lu.ndim == 0 else lu.astype(np.int64))
         self.l0_bloom = _bloom_rebuild_fn(self._w0, self._h0,
                                           nested=True)(self.l0_rows)
         self.l0_fence = self.l0_rows[:, :, ::self._b0]

@@ -219,6 +219,66 @@ def make_spmd_lsm_query_step(mesh, axis: str, combiner: str = "last",
     return jax.jit(fn)
 
 
+def make_spmd_lsm_scan_step(mesh, axis: str, combiner: str = "last",
+                            width: int = 128):
+    """Fused range scans on the mesh: ONE shard_map'd jit answers a
+    ``[lo, hi)`` row-range scan per shard over its level run plus its
+    ENTIRE L0 stack, merged-deduped on-device — the distributed analogue
+    of the local engine's ``scan_shard_fused`` (no id-list point
+    expansion, no per-run dispatches, no host combine).
+
+    Bounds arrive per shard as ``bounds[S, 2]`` (each shard answers its
+    own ``[lo, hi)`` slice; a shard outside the global range passes an
+    empty interval ``lo == hi``). Both endpoints rank with ``side='left'``
+    (``hi`` exclusive). Age order matches the point step: level run
+    (oldest) = 1, L0 slot k = 2 + k. Returns
+    (rows[S, W], cols[S, W], vals[S, W], keep[S, W], cnt_max[S]) with
+    W = (slots + 1) * width, kept entries sorted lex by (row, col);
+    ``cnt_max`` > width means some run's slice overflowed the window —
+    re-make the step wider (batch-scanner semantics)."""
+    from .kvstore import _dedup_combine
+
+    def window(rows, cols, vals, lohi):
+        cap = rows.shape[0]
+        start = jnp.searchsorted(rows, lohi[0], side="left").astype(jnp.int32)
+        end = jnp.searchsorted(rows, lohi[1], side="left").astype(jnp.int32)
+        idx = start + jnp.arange(width, dtype=jnp.int32)
+        idxc = jnp.clip(idx, 0, cap - 1)
+        return rows[idxc], cols[idxc], vals[idxc], idx < end, end - start
+
+    def shard_fn(l0: L0Stack, level: Tablet, bounds):
+        me = jax.tree.map(lambda x: x[0], l0)
+        lv = jax.tree.map(lambda x: x[0], level)
+        lohi = bounds[0]
+        slots = me.rows.shape[0]
+        r_lv, c_lv, v_lv, ok_lv, n_lv = window(lv.rows, lv.cols, lv.vals,
+                                               lohi)
+        r_l0, c_l0, v_l0, ok_l0, n_l0 = jax.vmap(
+            lambda r, c, v: window(r, c, v, lohi))(me.rows, me.cols, me.vals)
+        rows_all = jnp.concatenate([r_lv] + [r_l0[k] for k in range(slots)])
+        cols_all = jnp.concatenate([c_lv] + [c_l0[k] for k in range(slots)])
+        vals_all = jnp.concatenate([v_lv] + [v_l0[k] for k in range(slots)])
+        ok_all = jnp.concatenate([ok_lv] + [ok_l0[k] for k in range(slots)])
+        ages = jnp.concatenate(
+            [jnp.full((width,), a + 1, jnp.int32) for a in range(slots + 1)])
+        row_m = jnp.where(ok_all, rows_all, I32_MAX)
+        col_m = jnp.where(ok_all, cols_all, I32_MAX)
+        row_s, col_s, _, val_s = jax.lax.sort(
+            (row_m, col_m, ages, vals_all), dimension=0, num_keys=3)
+        keep, out_v = _dedup_combine(row_s, col_s, val_s, combiner)
+        cnt_max = jnp.maximum(jnp.max(n_l0), n_lv)
+        return (row_s[None], col_s[None],
+                jnp.where(keep, out_v, 0.0)[None], keep[None], cnt_max[None])
+
+    spec_t = Tablet(rows=P(axis, None), cols=P(axis, None),
+                    vals=P(axis, None), n=P(axis))
+    fn = _shard_map(shard_fn, mesh=mesh,
+                    in_specs=(_l0_spec(axis), spec_t, P(axis, None)),
+                    out_specs=(P(axis, None), P(axis, None), P(axis, None),
+                               P(axis, None), P(axis)), **_SHARD_MAP_KW)
+    return jax.jit(fn)
+
+
 def make_spmd_lsm_compact_step(mesh, axis: str, combiner: str = "last",
                                use_pallas: bool = False):
     """Major compaction on the mesh: k-way merge each shard's L0 runs with

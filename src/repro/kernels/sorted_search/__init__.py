@@ -1,5 +1,7 @@
-from .ops import sorted_search, sorted_search_batched
+from .ops import (sorted_search, sorted_search_batched,
+                  sorted_search_endpoints)
 from .ref import sorted_search_batched_ref, sorted_search_ref
 
 __all__ = ["sorted_search", "sorted_search_batched",
-           "sorted_search_batched_ref", "sorted_search_ref"]
+           "sorted_search_batched_ref", "sorted_search_endpoints",
+           "sorted_search_ref"]

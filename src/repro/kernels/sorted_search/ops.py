@@ -40,3 +40,19 @@ def sorted_search_batched(tabs: jax.Array, q: jax.Array, side: str = "left",
                               block_q=block_q, block_t=block_t,
                               interpret=interpret)
     return out[:, :n_q]
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_t",
+                                             "interpret"))
+def sorted_search_endpoints(tabs: jax.Array, lohi: jax.Array,
+                            block_q: int = 256, block_t: int = 2048,
+                            interpret: bool = INTERPRET):
+    """Fence-to-fence endpoint ranks for a ``[lo, hi)`` range scan: the
+    ``side='left'`` ranks of both endpoints in each row of ``tabs[K, N]``,
+    in ONE kernel launch (``lohi`` is the length-2 [lo, hi] vector; ``hi``
+    is exclusive, so both endpoints rank strictly). Returns
+    (start[K], end[K]) int32 — the candidate window of each run.
+    """
+    out = sorted_search_batched(tabs, lohi, "left", block_q=block_q,
+                                block_t=block_t, interpret=interpret)
+    return out[:, 0], out[:, 1]

@@ -1,0 +1,85 @@
+"""The CI bench-gate must go red on a synthetic >20% ratio regression and
+stay green within the threshold (acceptance bar for the gate job), and its
+markdown summary must land in $GITHUB_STEP_SUMMARY."""
+import json
+
+from benchmarks.gate import compare, extract_ratios, main, markdown
+
+BASE_QUERY = {
+    "rows": [{"fused_speedup": 1.8}, {"fused_speedup": 1.5}],
+    "scan_rows": [{"range_len": 64, "scan_speedup": 2.2},
+                  {"range_len": 1024, "scan_speedup": 9.0},
+                  {"range_len": 8, "scan_speedup": 0.7}],  # below floor
+}
+BASE_INGEST = {"lsm_ingest_speedup": 1.4}
+
+
+def test_extract_tracked_ratios():
+    got = extract_ratios(BASE_INGEST, BASE_QUERY)
+    assert got == {"fused_vs_per_run": 1.5,  # min over rows
+                   "scan_vs_point": 2.2,     # min over rows >= 64
+                   "lsm_vs_single": 1.4}
+
+
+def test_green_within_threshold_red_past_it():
+    base = extract_ratios(BASE_INGEST, BASE_QUERY)
+    # 10% drop everywhere: inside the 20% budget -> green
+    mild = {k: v * 0.9 for k, v in base.items()}
+    rows, ok = compare(base, mild, threshold=0.2)
+    assert ok and all(r["status"] == "ok" for r in rows)
+    # one ratio drops 25% -> red, and only that row flags
+    bad = dict(base)
+    bad["scan_vs_point"] = base["scan_vs_point"] * 0.75
+    rows, ok = compare(base, bad, threshold=0.2)
+    assert not ok
+    flags = {r["ratio"]: r["status"] for r in rows}
+    assert flags["scan_vs_point"] == "REGRESSED"
+    assert flags["fused_vs_per_run"] == "ok"
+    # a NEW ratio the baseline doesn't track yet is advisory (baselines
+    # can grow) ...
+    grown = dict(base, brand_new_ratio=3.0)
+    rows, ok = compare(base, grown, threshold=0.2)
+    assert ok and {r["status"] for r in rows} == {"ok", "untracked"}
+    # ... but a baseline-tracked ratio MISSING from the fresh run fails
+    # closed (flag drift / empty bench section must not pass silently)
+    rows, ok = compare(base, {k: v for k, v in base.items()
+                              if k != "lsm_vs_single"}, threshold=0.2)
+    assert not ok
+    assert {r["ratio"]: r["status"] for r in rows}["lsm_vs_single"] \
+        == "MISSING"
+
+
+def test_main_exit_codes_and_step_summary(tmp_path, monkeypatch):
+    bq = tmp_path / "bq.json"
+    bi = tmp_path / "bi.json"
+    bq.write_text(json.dumps(BASE_QUERY))
+    bi.write_text(json.dumps(BASE_INGEST))
+    summary = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+    argv_base = ["--baseline-ingest", str(bi), "--baseline-query", str(bq)]
+    # identical fresh run -> green
+    assert main(argv_base + ["--new-ingest", str(bi),
+                             "--new-query", str(bq)]) == 0
+    assert "Bench gate" in summary.read_text()
+    # synthetic 25% regression on the scan ratio -> red
+    worse = dict(BASE_QUERY)
+    worse["scan_rows"] = [{"range_len": 64, "scan_speedup": 2.2 * 0.75},
+                          {"range_len": 1024, "scan_speedup": 9.0}]
+    wq = tmp_path / "wq.json"
+    wq.write_text(json.dumps(worse))
+    assert main(argv_base + ["--new-ingest", str(bi),
+                             "--new-query", str(wq)]) == 1
+    assert "REGRESSED" in summary.read_text()
+    # no baselines at all -> advisory (repo bootstrap), green
+    assert main(["--baseline-ingest", str(tmp_path / "none1.json"),
+                 "--baseline-query", str(tmp_path / "none2.json"),
+                 "--new-ingest", str(bi), "--new-query", str(bq)]) == 0
+
+
+def test_markdown_table_shape():
+    base = extract_ratios(BASE_INGEST, BASE_QUERY)
+    rows, _ = compare(base, base)
+    md = markdown(rows, 0.2)
+    assert md.count("|") >= 5 * (len(rows) + 2)
+    for name in base:
+        assert name in md

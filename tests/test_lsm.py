@@ -320,7 +320,8 @@ from jax.sharding import PartitionSpec as P, NamedSharding
 
 from repro.db.spmd import (l0_stacked_empty, make_spmd_lsm_ingest_step,
                            make_spmd_lsm_compact_step,
-                           make_spmd_lsm_query_step, stacked_empty)
+                           make_spmd_lsm_query_step,
+                           make_spmd_lsm_scan_step, stacked_empty)
 from repro.kernels.common import I32_MAX
 
 S, BCAP, IDCAP, SLOTS, CAP = 8, 128, 1 << 12, 3, 1 << 13
@@ -391,6 +392,29 @@ badq = [k for k in want_q if abs(got_q[k] - want_q[k]) > 1e-2]
 assert not badq, badq[:5]
 print("LSM-SPMD-QUERY-OK", len(got_q))
 
+# fused range scan (also BEFORE the final compact, so it must merge the
+# level run + L0 stack on-device): a global [lo, hi) split into per-shard
+# bounds; shards outside the range pass an empty interval
+scan = make_spmd_lsm_scan_step(mesh, "data", combiner="sum", width=1024)
+lo_g, hi_g = IDCAP // 4, IDCAP // 2
+bounds = np.zeros((S, 2), np.int32)
+for s in range(S):
+    slo, shi = s * IDCAP // S, (s + 1) * IDCAP // S
+    if max(lo_g, slo) < min(hi_g, shi):
+        bounds[s] = (max(lo_g, slo), min(hi_g, shi))
+sr, sc, sv, sk, scnt = scan(l0, level, jax.device_put(jnp.asarray(bounds), shq))
+sr, sc, sv, sk = map(np.asarray, (sr, sc, sv, sk))
+assert int(np.asarray(scnt).max()) <= 1024, "scan window overflow"
+got_s = {}
+for s in range(S):
+    for j in np.nonzero(sk[s])[0]:
+        got_s[(int(sr[s, j]), int(sc[s, j]))] = float(sv[s, j])
+want_s = {k: v for k, v in oracle.items() if lo_g <= k[0] < hi_g}
+assert set(got_s) == set(want_s), (len(got_s), len(want_s))
+bads = [k for k in want_s if abs(got_s[k] - want_s[k]) > 1e-2]
+assert not bads, bads[:5]
+print("LSM-SPMD-SCAN-OK", len(got_s))
+
 l0, level = compact(l0, level)
 rows = np.asarray(level.rows); cols = np.asarray(level.cols)
 vals = np.asarray(level.vals); ns = np.asarray(level.n)
@@ -414,4 +438,5 @@ def test_spmd_lsm_ingest_and_compact():
                          cwd=".", capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-3000:]
     assert "LSM-SPMD-QUERY-OK" in out.stdout
+    assert "LSM-SPMD-SCAN-OK" in out.stdout
     assert "LSM-SPMD-OK" in out.stdout

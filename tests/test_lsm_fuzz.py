@@ -28,6 +28,10 @@ from repro.kernels.common import I32_MAX
 BATCH_N = 4          # triples per batch -> 8 + 12*4 = 56-byte records
 N_PRE, N_POST = 3, 3  # batches before / after the checkpoint
 
+# weekly CI deep lane: FUZZ_BUDGET=N widens the random-offset sample (and
+# tightens the second-crash cadence) by that much
+FUZZ_BUDGET = int(os.environ.get("FUZZ_BUDGET", "0"))
+
 
 def _build_wal_dir(root):
     """A checkpointed store plus post-checkpoint WAL-only batches.
@@ -83,10 +87,11 @@ def test_wal_truncation_fuzz(tmp_path):
     size = os.path.getsize(wal)
     tail_start = ends[-2]  # every byte of the final record's frame
     rng = np.random.default_rng(7)
-    sampled = sorted(set(
-        int(x) for x in rng.integers(0, tail_start, 12)))  # incl. header
+    sampled = sorted(set(int(x) for x in
+                         rng.integers(0, tail_start,
+                                      12 + FUZZ_BUDGET)))  # incl. header
     cuts = sampled + list(range(tail_start, size + 1))
-    second_crash_every = 6
+    second_crash_every = 3 if FUZZ_BUDGET else 6
     for i, cut in enumerate(cuts):
         d = str(tmp_path / f"cut{cut}")
         shutil.copytree(src, d)

@@ -1,17 +1,23 @@
 """Differential property tests for the storage engines.
 
-Random interleavings of ingest/flush/compact/query are applied to THREE
-readers of the same logical table — the LSM engine's fused single-dispatch
-read path, its per-run baseline path, and the legacy single-run engine —
-plus a sequential dict oracle; all four must agree for every combiner.
-Runs under real hypothesis when installed, else the deterministic shim
-(tests/_hypothesis_compat.py).
+Random interleavings of ingest/flush/compact/query/scan are applied to
+THREE readers of the same logical table — the LSM engine's fused
+single-dispatch read path, its per-run baseline path, and the legacy
+single-run engine — plus a sequential dict oracle; all four must agree
+for every combiner. Range scans are additionally checked against id-list
+point expansion of the same range (the pre-scan read path). Runs under
+real hypothesis when installed, else the deterministic shim
+(tests/_hypothesis_compat.py). ``FUZZ_BUDGET`` (env, CI's weekly deep
+lane) adds that many extra examples per property.
 
-Also home to the fused read path's structural guarantees: the
-one-dispatch assertion (memtable + L0 runs + leveled runs answered by
-exactly one compiled-function invocation) and the batched Pallas rank
-kernel's equivalence to its reference.
+Also home to the fused read paths' structural guarantees: the
+one-dispatch assertions for point queries AND range scans (memtable + L0
+runs + leveled runs answered by exactly one compiled-function invocation,
+every other entry point poisoned) and the batched Pallas rank kernel's
+equivalence to its reference.
 """
+import os
+
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
@@ -21,6 +27,9 @@ from repro.db.lsm import engine as lsm_engine
 from repro.kernels.common import I32_MAX
 from repro.kernels.sorted_search import (sorted_search_batched,
                                          sorted_search_batched_ref)
+
+# weekly CI deep lane: FUZZ_BUDGET=N adds N examples to every property
+FUZZ_BUDGET = int(os.environ.get("FUZZ_BUDGET", "0"))
 
 # one tiny fixed geometry for EVERY example: jit caches stay warm across
 # examples, so each draw costs milliseconds, not a recompile
@@ -56,15 +65,18 @@ def _check_close(got, want, label, ctx):
             (label, ctx, k, got[k], want[k])
 
 
-@settings(max_examples=10, deadline=None)
+@settings(max_examples=10 + FUZZ_BUDGET, deadline=None)
 @given(st.integers(0, 2 ** 31 - 1),
        st.sampled_from(COMBINERS),
        st.lists(st.sampled_from(["ins", "ins", "ins", "flush", "compact",
-                                 "query"]), min_size=4, max_size=12))
+                                 "query", "scan"]), min_size=4, max_size=12))
 def test_engines_and_read_paths_agree(seed, combiner, ops):
     """insert/flush/compact in random order; every query op must return
     identical results from the fused LSM path, the per-run LSM path, the
-    legacy engine, and the oracle. Ends with a full-scan comparison."""
+    legacy engine, and the oracle — and every scan op must return the
+    same range from the fused scan, id-list point expansion, the
+    full-scan-filter baseline, the legacy engine, and the oracle. Ends
+    with a full-scan comparison."""
     rng = np.random.default_rng(seed)
     _mk.combiner = combiner
     lsm = _mk("lsm", True)          # one LSM store, two read procedures
@@ -89,6 +101,28 @@ def test_engines_and_read_paths_agree(seed, combiner, ops):
         _check_close(perrun, want, "per-run", (seed, combiner))
         _check_close(legacy, want, "single-engine", (seed, combiner))
 
+    def check_scan():
+        # random [lo, hi): sometimes empty (hi == lo), sometimes past the
+        # id space, and — mid-sequence — often spanning data that sits on
+        # both sides of a flush/compaction boundary
+        lo = int(rng.integers(0, CFG["id_capacity"]))
+        hi = min(lo + int(rng.integers(0, 64)), CFG["id_capacity"] + 4)
+        want = {k: v for k, v in oracle.items() if lo <= k[0] < hi}
+        ctx = (seed, combiner, lo, hi)
+        lsm.fused_reads = True
+        fused = _as_dict(*lsm.scan_range(lo, hi))
+        # id-list point expansion of the same range (the pre-scan path)
+        ids = np.arange(lo, min(hi, CFG["id_capacity"]), dtype=np.int32)
+        expanded = _as_dict(*lsm.query_rows(ids)) if len(ids) else {}
+        lsm.fused_reads = False
+        filtered = _as_dict(*lsm.scan_range(lo, hi))  # full-scan baseline
+        lsm.fused_reads = True
+        legacy = _as_dict(*single.scan_range(lo, hi))
+        _check_close(fused, want, "fused-scan", ctx)
+        _check_close(expanded, want, "point-expansion", ctx)
+        _check_close(filtered, want, "scan-filter-baseline", ctx)
+        _check_close(legacy, want, "single-engine-scan", ctx)
+
     for op in ops:
         if op == "ins":
             n = int(rng.integers(1, 28))
@@ -106,9 +140,12 @@ def test_engines_and_read_paths_agree(seed, combiner, ops):
         elif op == "compact":
             lsm.major_compact()
             single.flush()  # legacy engine has no compaction
+        elif op == "scan":
+            check_scan()
         else:
             check_query()
     check_query()
+    check_scan()
     got = _as_dict(*lsm.scan())
     _check_close(got, oracle, "scan", (seed, combiner))
 
@@ -149,7 +186,7 @@ def test_fused_point_query_is_one_dispatch(monkeypatch):
     put(64, 600)             # L0 run 2
     st_.flush()
     put(20, 800)             # non-empty memtable tail
-    assert st_._runs.l0_used >= 2 and int(st_._mem_n[0]) > 0
+    assert int(st_._runs.l0_used[0]) >= 2 and int(st_._mem_n[0]) > 0
 
     # poison every non-fused query entry point
     def boom(*a, **k):
@@ -170,7 +207,106 @@ def test_fused_point_query_is_one_dispatch(monkeypatch):
     got = _as_dict(qr, qc, qv)
     _check_close(got, want, "one-dispatch", ())
     # reads never flushed anything
-    assert int(st_._mem_n[0]) > 0 and st_._runs.l0_used >= 2
+    assert int(st_._mem_n[0]) > 0 and int(st_._runs.l0_used[0]) >= 2
+
+
+def test_fused_range_scan_is_one_dispatch(monkeypatch):
+    """The scan acceptance bar: a [lo, hi) range scan against a shard
+    holding a non-empty memtable, >=2 L0 runs, and >=2 leveled runs runs
+    exactly ONE compiled-function invocation — counted via the engine's
+    scan-dispatch counter, with the point-query entry points (fused AND
+    per-run) poisoned so any id-list point expansion fails loudly."""
+    st_ = ShardedTable("one_scan", num_shards=1,
+                       capacity_per_shard=4096, batch_cap=256,
+                       id_capacity=1 << 10, combiner="sum",
+                       memtable_cap=64, l0_slots=4, engine="lsm")
+    rng = np.random.default_rng(1)
+    oracle = {}
+
+    def put(n, base):
+        r = (base + rng.integers(0, 200, n)).astype(np.int32)
+        c = rng.integers(0, 4, n).astype(np.int32)
+        v = rng.normal(size=n).astype(np.float32)
+        st_.insert(r, c, v)
+        for a, b, x in zip(r, c, v):
+            oracle[(int(a), int(b))] = oracle.get((int(a), int(b)), 0.0) \
+                + float(x)
+
+    for _ in range(8):       # deep compaction, then a shallow one
+        put(64, 0)
+    st_.major_compact()
+    for _ in range(2):
+        put(64, 200)
+    st_.major_compact()
+    levels_live = sum(1 for lv in st_._runs.levels if lv["n"][0] > 0)
+    assert levels_live >= 2, [int(lv["n"][0]) for lv in st_._runs.levels]
+    put(64, 400)             # L0 run 1
+    st_.flush()
+    put(64, 600)             # L0 run 2
+    st_.flush()
+    put(20, 800)             # non-empty memtable tail
+    assert int(st_._runs.l0_used[0]) >= 2 and int(st_._mem_n[0]) > 0
+
+    # poison EVERY point-query entry point: the scan must not expand the
+    # range into point reads, fused or otherwise
+    def boom(*a, **k):
+        raise AssertionError("point-query path was dispatched for a scan")
+    monkeypatch.setattr(lsm_engine, "run_query_gated", boom)
+    monkeypatch.setattr(lsm_engine, "run_query_rows", boom)
+    monkeypatch.setattr(lsm_engine.LSMRuns, "query_shard_fused", boom)
+    monkeypatch.setattr(lsm_engine.LSMRuns, "query_shard", boom)
+
+    lo, hi = 150, 700        # spans both levels, both L0 runs
+    before = dict(st_.engine_stats())
+    r, c, v = st_.scan_range(lo, hi, width=1024)
+    after = st_.engine_stats()
+    assert after["scan_dispatches"] - before["scan_dispatches"] == 1, \
+        (before, after)
+    assert after["scan_widen_retries"] == before["scan_widen_retries"]
+    assert after["fused_dispatches"] == before["fused_dispatches"]
+    want = {k: x for k, x in oracle.items() if lo <= k[0] < hi}
+    _check_close(_as_dict(r, c, v), want, "one-dispatch-scan", (lo, hi))
+    # scans never flushed anything
+    assert int(st_._mem_n[0]) > 0 and int(st_._runs.l0_used[0]) >= 2
+    # widen retry: a deliberately tiny window must re-dispatch ONCE wider
+    # and still return the identical result
+    r2, c2, v2 = st_.scan_range(lo, hi, width=16)
+    assert st_.engine_stats()["scan_widen_retries"] \
+        == after["scan_widen_retries"] + 1
+    _check_close(_as_dict(r2, c2, v2), want, "widen-retry-scan", (lo, hi))
+
+
+def test_major_compaction_only_compacts_full_shards():
+    """Per-shard compaction scheduling: a hot shard filling ITS L0 must
+    not drag a cold peer's L0 runs into a level merge (pre-fix, any
+    shard's full L0 compacted every shard in lockstep)."""
+    st_ = ShardedTable("selcomp", num_shards=2, capacity_per_shard=2048,
+                       batch_cap=128, id_capacity=1 << 10, combiner="last",
+                       memtable_cap=32, l0_slots=3, engine="lsm")
+    # one L0 run for the cold shard (ids >= 512 live on shard 1)
+    st_.insert(512 + np.arange(20, dtype=np.int32), np.zeros(20, np.int32),
+               np.ones(20, np.float32))
+    st_.flush()
+    assert [int(x) for x in st_._runs.l0_used] == [0, 1]
+    # fill the hot shard's L0 to the brim -> automatic major compaction
+    for i in range(3):
+        st_.insert(np.arange(24, dtype=np.int32) + 24 * i,
+                   np.zeros(24, np.int32),
+                   np.full(24, float(i), np.float32))
+        st_.flush()
+    assert st_.engine_stats()["major_compactions"] >= 1
+    # hot shard compacted into a level; cold shard's L0 run UNTOUCHED
+    assert int(st_._runs.l0_used[0]) == 0
+    assert int(st_._runs.l0_used[1]) == 1
+    assert sum(int(lv["n"][0]) for lv in st_._runs.levels) == 72
+    assert sum(int(lv["n"][1]) for lv in st_._runs.levels) == 0
+    # both shards still answer reads exactly
+    got = _as_dict(*st_.query_rows(np.asarray([0, 30, 512, 531], np.int32)))
+    assert got == {(0, 0): 0.0, (30, 0): 1.0, (512, 0): 1.0, (531, 0): 1.0}
+    # an explicit full compaction still sweeps everything
+    st_.major_compact()
+    assert int(st_._runs.l0_used[1]) == 0
+    assert sum(int(lv["n"][1]) for lv in st_._runs.levels) == 20
 
 
 def test_fused_handles_empty_runs_and_absent_keys():
@@ -208,7 +344,7 @@ def test_fused_duplicate_query_ids_parity():
     assert len(r) == 4
 
 
-@settings(max_examples=6, deadline=None)
+@settings(max_examples=6 + FUZZ_BUDGET, deadline=None)
 @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 4),
        st.integers(1, 40))
 def test_batched_rank_search_matches_ref(seed, n_runs, n_q):
