@@ -63,6 +63,61 @@ def extract_ratios(ingest: Optional[dict],
     return out
 
 
+def extract_tail_ratios(ingest: Optional[dict],
+                        query: Optional[dict]) -> Dict[str, float]:
+    """Advisory tail-latency ratios: p99/p50 amplification per op family.
+    These ride along in the gate summary but NEVER turn the gate red —
+    tail latencies on shared CI runners are too noisy to gate on until a
+    baselined noise floor exists (tracked ratios stay the sole gating
+    mechanism). Higher = fatter tail."""
+    out: Dict[str, float] = {}
+
+    def amp(hi, lo):
+        return hi / lo if lo else None
+
+    if query:
+        fused = [amp(r.get("fused_p99_us"), r.get("fused_p50_us"))
+                 for r in (query.get("rows") or [])]
+        fused = [a for a in fused if a]
+        if fused:
+            out["fused_read_p99_over_p50"] = max(fused)
+        scans = [amp(r.get("scan_p99_us"), r.get("scan_p50_us"))
+                 for r in (query.get("scan_rows") or [])]
+        scans = [a for a in scans if a]
+        if scans:
+            out["scan_p99_over_p50"] = max(scans)
+    if ingest:
+        for eng, rec in (ingest.get("engines") or {}).items():
+            a = amp(rec.get("ingest_batch_p99_ms"),
+                    rec.get("ingest_batch_p50_ms"))
+            if a:
+                out[f"{eng}_ingest_p99_over_p50"] = a
+            a = amp(rec.get("query_p99_ms"), rec.get("query_p50_ms"))
+            if a:
+                out[f"{eng}_query_p99_over_p50"] = a
+    return out
+
+
+def tail_markdown(baseline: Dict[str, float],
+                  new: Dict[str, float]) -> str:
+    """Markdown for the advisory tail table; empty string when neither
+    side carries tail fields (old artifacts)."""
+    names = sorted(set(baseline) | set(new))
+    if not names:
+        return ""
+    lines = ["## Tail latency (advisory)",
+             "p99/p50 amplification per op family; informational only — "
+             "never fails the gate", "",
+             "| ratio | baseline | new |",
+             "|---|---|---|"]
+    for name in names:
+        def fmt(x):
+            return "—" if x is None else f"{x:.1f}x"
+        lines.append(f"| {name} | {fmt(baseline.get(name))} | "
+                     f"{fmt(new.get(name))} |")
+    return "\n".join(lines) + "\n"
+
+
 def compare(baseline: Dict[str, float], new: Dict[str, float],
             threshold: float = 0.2) -> Tuple[List[dict], bool]:
     """One row per tracked ratio; ``ok`` is False iff a ratio present in
@@ -130,6 +185,12 @@ def main(argv=None) -> int:
     new = extract_ratios(_load(args.new_ingest), _load(args.new_query))
     rows, ok = compare(baseline, new, args.threshold)
     md = markdown(rows, args.threshold)
+    tail_md = tail_markdown(
+        extract_tail_ratios(_load(args.baseline_ingest),
+                            _load(args.baseline_query)),
+        extract_tail_ratios(_load(args.new_ingest), _load(args.new_query)))
+    if tail_md:
+        md = md + "\n" + tail_md
     print(md)
     summary = os.environ.get("GITHUB_STEP_SUMMARY")
     if summary:

@@ -23,6 +23,7 @@ from repro.db.kvstore import ShardedTable, shard_of
 from repro.db.naive import NaiveTable
 from repro.core.dictionary import StringDict
 from repro.kernels.common import I32_MAX
+from repro.obs import Histogram, default_registry
 from repro.train.elastic import WorkQueue
 
 import jax
@@ -220,9 +221,18 @@ def engine_compare(entries_per_shard: int = 1 << 18, shards: int = 2,
     ratios = sorted(s / l for s, l in zip(walls["single"], walls["lsm"]))
 
     # ---- phase 2: flush-cost probe + query phase per engine
+    reg = default_registry()
     for engine in ("single", "lsm"):
         store = stores[engine]
         ingest_wall = min(walls[engine])
+        # per-batch ingest latency percentiles, pooled across every repeat's
+        # store (repro.obs histograms populated by ShardedTable.insert
+        # during the timed phase — tail latency beside the throughput rows)
+        h_ing = Histogram(reg, "pooled_ingest", {})
+        for rep in range(max(repeats, 1)):
+            for h in reg.series("db_op_latency_s",
+                                table=f"cmp_{engine}_{rep}", op="ingest"):
+                h_ing.merge(h)
         # explicit flush-cost probe at FULL table size: the single-run
         # engine pays O(capacity) to absorb one memtable, the LSM engine
         # O(memtable) — the core scaling claim, measured directly
@@ -244,12 +254,26 @@ def engine_compare(entries_per_shard: int = 1 << 18, shards: int = 2,
         qr, qc, qv = store.query_rows(q)
         query_wall = time.time() - t0
         flushed = bool((store._mem_n != mem_before).any())
+        # per-call query latency sampling: repeated SMALL batches (the
+        # tracked queries_per_s protocol above is one big batch and stays
+        # untouched) so p50/p99 reflect per-dispatch read latency
+        qb = 16
+        store.query_rows(q[:qb])  # warm the small-batch jit off the clock
+        store._h_query.reset()
+        for i in range(64):
+            j = (i * qb) % max(n_queries - qb, 1)
+            store.query_rows(q[j:j + qb])
+        lat_q = store._h_query.percentiles()
         out["engines"][engine] = {
             "ingest_wall_s": ingest_wall,
             "entries_per_s": total / ingest_wall,
+            "ingest_batch_p50_ms": h_ing.quantile(0.50) * 1e3,
+            "ingest_batch_p99_ms": h_ing.quantile(0.99) * 1e3,
             "flush_at_full_table_s": flush_wall,
             "query_wall_s": query_wall,
             "queries_per_s": n_queries / query_wall,
+            "query_p50_ms": lat_q["p50"] * 1e3,
+            "query_p99_ms": lat_q["p99"] * 1e3,
             "query_hits": int(len(qr)),
             "flushed_on_read": flushed,
             "stats": store.engine_stats(),
@@ -283,6 +307,9 @@ def main() -> None:
                     help="interleave N (single, lsm) ingest runs; the "
                          "reported lsm_ingest_speedup is the MEDIAN "
                          "per-repeat ratio (noise-robust CI gate metric)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="also dump the full repro.obs registry snapshot "
+                         "(counters + latency histograms) as JSON")
     args = ap.parse_args()
     if args.smoke or args.compare:
         eps = args.entries_per_shard or (1 << 14 if args.smoke else 1 << 18)
@@ -294,6 +321,9 @@ def main() -> None:
         with open(args.out, "w") as f:
             json.dump(result, f, indent=1)
         print(f"wrote {args.out}")
+        if args.metrics_out:
+            default_registry().dump(args.metrics_out)
+            print(f"wrote {args.metrics_out}")
         return
     fig3()
     batch_sweep()

@@ -1,0 +1,127 @@
+"""Render a p50/p99 latency table from the benchmark JSON artifacts.
+
+Reads ``BENCH_ingest.json`` / ``BENCH_query.json`` (or fresh CI copies)
+plus an optional registry dump (``--metrics``, written by
+``ingest_bench --metrics-out``) and prints a markdown latency table —
+appended to ``$GITHUB_STEP_SUMMARY`` when set, so every CI run shows the
+tail-latency trajectory next to the bench gate without gating on it.
+
+  PYTHONPATH=src python -m benchmarks.latency_report \
+      --ingest fresh_ingest.json --query fresh_query.json \
+      --metrics METRICS_ingest.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional
+
+
+def _load(path: Optional[str]) -> Optional[dict]:
+    if not path or not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _fmt(x, scale=1.0) -> str:
+    if x is None:
+        return "—"
+    v = x * scale
+    return f"{v:,.2f}" if v < 100 else f"{v:,.0f}"
+
+
+def bench_rows(ingest: Optional[dict], query: Optional[dict]) -> List[dict]:
+    """One row per (op, variant) with p50/p99 in microseconds."""
+    rows: List[dict] = []
+    if ingest:
+        for eng, rec in (ingest.get("engines") or {}).items():
+            if "ingest_batch_p50_ms" in rec:
+                rows.append({"op": "ingest batch", "variant": eng,
+                             "p50_us": rec["ingest_batch_p50_ms"] * 1e3,
+                             "p99_us": rec.get("ingest_batch_p99_ms",
+                                               0) * 1e3})
+            if "query_p50_ms" in rec:
+                rows.append({"op": "point query (16-row)", "variant": eng,
+                             "p50_us": rec["query_p50_ms"] * 1e3,
+                             "p99_us": rec.get("query_p99_ms", 0) * 1e3})
+    if query:
+        for r in query.get("rows") or []:
+            if "fused_p50_us" not in r:
+                continue
+            tag = (f"{r.get('resident_runs_per_shard', '?')} runs"
+                   + ("+levels" if r.get("with_levels") else ""))
+            rows.append({"op": f"point read ({tag})", "variant": "fused",
+                         "p50_us": r["fused_p50_us"],
+                         "p99_us": r["fused_p99_us"]})
+            rows.append({"op": f"point read ({tag})", "variant": "per_run",
+                         "p50_us": r["per_run_p50_us"],
+                         "p99_us": r["per_run_p99_us"]})
+        for r in query.get("scan_rows") or []:
+            if "scan_p50_us" not in r:
+                continue
+            tag = f"len={r.get('range_len', '?')}"
+            rows.append({"op": f"range scan ({tag})", "variant": "fused",
+                         "p50_us": r["scan_p50_us"],
+                         "p99_us": r["scan_p99_us"]})
+            rows.append({"op": f"range scan ({tag})",
+                         "variant": "point_expansion",
+                         "p50_us": r["point_expansion_p50_us"],
+                         "p99_us": r["point_expansion_p99_us"]})
+    return rows
+
+
+def metrics_rows(metrics: Optional[dict]) -> List[dict]:
+    """Histogram series from a registry dump (``Registry.dump``) — one
+    row per latency series, p50/p99 read straight from the snapshot."""
+    rows: List[dict] = []
+    for key, snap in sorted((metrics or {}).items()):
+        # counters dump as scalars; histograms as dicts with top-level
+        # p50/p99 (present only when count > 0)
+        if not isinstance(snap, dict) or "p50" not in snap:
+            continue
+        rows.append({"op": key, "variant": f"n={snap['count']}",
+                     "p50_us": snap["p50"] * 1e6,
+                     "p99_us": snap.get("p99", 0) * 1e6})
+    return rows
+
+
+def markdown(rows: List[dict], title: str) -> str:
+    if not rows:
+        return ""
+    lines = [f"## {title}", "",
+             "| op | variant | p50 (µs) | p99 (µs) |",
+             "|---|---|---|---|"]
+    for r in rows:
+        lines.append(f"| {r['op']} | {r['variant']} | "
+                     f"{_fmt(r['p50_us'])} | {_fmt(r['p99_us'])} |")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ingest", default="BENCH_ingest.json")
+    ap.add_argument("--query", default="BENCH_query.json")
+    ap.add_argument("--metrics", default=None,
+                    help="registry dump from ingest_bench --metrics-out")
+    args = ap.parse_args(argv)
+    md = markdown(bench_rows(_load(args.ingest), _load(args.query)),
+                  "Latency (p50/p99)")
+    mmd = markdown(metrics_rows(_load(args.metrics)),
+                   "Registry latency series")
+    out = "\n".join(s for s in (md, mmd) if s)
+    if not out:
+        print("no latency fields found in the given artifacts")
+        return 0
+    print(out)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

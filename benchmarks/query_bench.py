@@ -132,20 +132,27 @@ def fused_read_compare(reps: int = 100, q_rows: int = 4,
         qs = [np.unique(rng.choice(present, q_rows)).astype(np.int32)
               for _ in range(8)]
         timings = {}
+        tails = {}
         for mode, fused in (("fused", True), ("per_run", False)):
             st.fused_reads = fused
             for q in qs:
                 st.query_rows(q)  # warm both jit caches off the clock
+            st._h_query.reset()  # per-mode latency histogram (obs registry)
             t0 = time.time()
             for i in range(reps):
                 st.query_rows(qs[i % len(qs)])
             timings[mode] = (time.time() - t0) / reps * 1e6
+            tails[mode] = st._h_query.percentiles()
         st.fused_reads = True
         row = {"resident_runs_per_shard": resident,
                "with_levels": with_levels,
                "fused_us_per_query": timings["fused"],
                "per_run_us_per_query": timings["per_run"],
                "fused_speedup": timings["per_run"] / timings["fused"],
+               "fused_p50_us": tails["fused"]["p50"] * 1e6,
+               "fused_p99_us": tails["fused"]["p99"] * 1e6,
+               "per_run_p50_us": tails["per_run"]["p50"] * 1e6,
+               "per_run_p99_us": tails["per_run"]["p99"] * 1e6,
                "fused_dispatches": st.engine_stats()["fused_dispatches"]}
         result["rows"].append(row)
         print(f"runs/shard={resident:2d} levels={with_levels} "
@@ -181,20 +188,28 @@ def scan_read_compare(reps: int = 30, lengths=(64, 256, 1024),
         st.scan_range(los[0], los[0] + length)      # warm the jit caches
         st.query_rows(np.arange(los[0], los[0] + length, dtype=np.int32))
         d0 = st.engine_stats()["scan_dispatches"]
+        st._h_scan.reset()  # per-mode latency histogram (obs registry)
         t0 = time.time()
         for i in range(reps):
             lo = los[i % len(los)]
             st.scan_range(lo, lo + length)
         scan_us = (time.time() - t0) / reps * 1e6
+        scan_tail = st._h_scan.percentiles()
         dispatches = (st.engine_stats()["scan_dispatches"] - d0) / reps
+        st._h_query.reset()
         t0 = time.time()
         for i in range(reps):
             lo = los[i % len(los)]
             st.query_rows(np.arange(lo, lo + length, dtype=np.int32))
         point_us = (time.time() - t0) / reps * 1e6
+        point_tail = st._h_query.percentiles()
         row = {"range_len": length, "scan_us": scan_us,
                "point_expansion_us": point_us,
                "scan_speedup": point_us / scan_us,
+               "scan_p50_us": scan_tail["p50"] * 1e6,
+               "scan_p99_us": scan_tail["p99"] * 1e6,
+               "point_expansion_p50_us": point_tail["p50"] * 1e6,
+               "point_expansion_p99_us": point_tail["p99"] * 1e6,
                "scan_dispatches_per_call": dispatches}
         result["scan_rows"].append(row)
         print(f"range_len={length:5d} scan={scan_us:9.1f}us "

@@ -1,0 +1,92 @@
+"""Observability tour: metrics registry, latency histograms, span traces.
+
+Ingests a small graph through the D4M connector, then walks the three
+surfaces `repro.obs` exposes:
+
+  1. ``DBserver.metrics()``    — per-table/per-shard counters + p50/p99
+  2. the raw ``Registry``      — labeled series, aggregation, snapshots
+  3. the ``Tracer``            — nested spans, slow-op log, Chrome export
+
+  PYTHONPATH=src python examples/observability.py
+"""
+import json
+
+import numpy as np
+
+from repro.db import dbinit, dbsetup
+from repro.obs import default_registry, default_tracer, set_enabled
+
+dbinit()
+DB = dbsetup("obsdemo", num_shards=4, capacity_per_shard=1 << 14,
+             batch_cap=4096, id_capacity=1 << 16)  # ~16k ids/shard
+T = DB["edges", "edgesT"]
+
+# --- generate some traffic -------------------------------------------------
+rng = np.random.default_rng(0)
+for batch in range(8):
+    n = 2000
+    src = np.asarray([f"v{int(i):05d}" for i in
+                      rng.zipf(1.6, n) % 30_000], object)
+    dst = np.asarray([f"v{int(i):05d}" for i in
+                      rng.integers(0, 30_000, n)], object)
+    T.put_triple(src, dst, np.ones(n))
+for _ in range(50):
+    v = f"v{int(rng.integers(0, 30_000)):05d},"
+    T[v, :]                       # point reads (fused single-dispatch)
+T["v00100,:,v00200,", :]          # a range read (fused fence-to-fence scan)
+
+# --- 1. the server-level snapshot ------------------------------------------
+m = DB.metrics()
+tab = m["tables"]["edges"]
+lat = tab["latency_s"]
+print(f"engine={tab['engine']}  "
+      f"flushes={tab['counters']['flushes']}  "
+      f"fused_dispatches={tab['counters']['fused_dispatches']}")
+for op in ("ingest", "query", "scan"):
+    s = lat[op]
+    if s["count"]:
+        print(f"  {op:6s} n={s['count']:<5d} p50={s['p50'] * 1e6:8.0f}us "
+              f"p99={s['p99'] * 1e6:8.0f}us")
+# per-shard counters are the hot-shard detector: zipf-distributed row
+# keys get dictionary ids in first-seen order, so the skewed head of the
+# distribution lands together — visible here, invisible in table totals
+for shard, rec in sorted(tab["shards"].items()):
+    print(f"  shard {shard}: ingested={rec['ingest_entries']:>6,} "
+          f"point_queries={rec['point_queries']:>4}")
+DB.dump_metrics("/tmp/obsdemo_metrics.json")
+print("full snapshot -> /tmp/obsdemo_metrics.json")
+
+# --- 2. the registry directly ----------------------------------------------
+reg = default_registry()
+probes = reg.aggregate("lsm_runs_probed", table="edges")
+skips = reg.aggregate("lsm_runs_skipped", table="edges")
+print(f"bloom/fence filtering: probed={probes} skipped={skips}")
+h = reg.aggregate("db_op_latency_s", table="edges", op="query")
+if h and h["count"]:
+    print(f"query latency (merged across calls): mean={h['mean'] * 1e6:.0f}us "
+          f"p999={h['p999'] * 1e6:.0f}us")
+
+# --- 3. span traces --------------------------------------------------------
+tr = default_tracer()
+spans = tr.spans()
+print(f"\n{len(spans)} spans in the ring; last query breakdown:")
+for rec in [r for r in spans if r["name"] in
+            ("query.fused", "dispatch", "host_sync")][-3:]:
+    print(f"  {'  ' * rec['depth']}{rec['name']:<12s} "
+          f"{rec['dur'] * 1e6:8.1f}us  (parent={rec['parent']})")
+slow = tr.slow_ops()
+if slow:
+    worst = max(slow, key=lambda r: r["dur"])
+    print(f"slow ops (>= {tr.slow_threshold_s * 1e3:.0f}ms): {len(slow)}, "
+          f"worst = {worst['name']} at {worst['dur'] * 1e3:.1f}ms")
+tr.export_chrome("/tmp/obsdemo_trace.json")
+print("chrome trace -> /tmp/obsdemo_trace.json "
+      "(load in chrome://tracing or ui.perfetto.dev)")
+
+# --- kill switch -----------------------------------------------------------
+set_enabled(False)               # every instrument becomes a no-op
+before = json.dumps(reg.snapshot("db_point_queries"))
+T[f"v{int(rng.integers(0, 30_000)):05d},", :]
+assert json.dumps(reg.snapshot("db_point_queries")) == before
+set_enabled(True)
+print("\nset_enabled(False) verified: reads leave no metric trace")

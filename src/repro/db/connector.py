@@ -23,6 +23,7 @@ import numpy as np
 
 from ..core.assoc import Assoc, split_str
 from ..core.dictionary import StringDict
+from ..obs import Histogram, default_registry
 from . import batching
 from .kvstore import ShardedTable
 
@@ -287,6 +288,94 @@ class DBserver:
         if len(span_ids) >= self.RANGE_SCAN_DENSITY * span:
             return ("range", (lo_id, hi_id, span_ids))
         return ("ids", span_ids)
+
+    # -------------------------------------------------------- observability
+    # per-op latency histograms emitted by ShardedTable / LSMRuns, keyed by
+    # the metric-catalog op names (src/repro/db/README.md "Observability")
+    _METRIC_OPS = ("ingest", "query", "scan", "flush", "major_compaction")
+
+    def metrics(self) -> dict:
+        """Aggregated observability snapshot of every live bound table:
+        per-shard and per-table counters, per-op latency percentiles, WAL
+        append/fsync totals, plus a cross-table aggregate. JSON-ready."""
+        reg = default_registry()
+
+        def pooled(name, tables, **extra):
+            h = Histogram(reg, name, {})
+            for t in tables:
+                key = "table" if not name.startswith("wal_") else "log"
+                for inst in reg.series(name, **{key: t}, **extra):
+                    h.merge(inst)
+            return h.snapshot()
+
+        def ctr_sum(name, tables, **extra):
+            key = "table" if not name.startswith("wal_") else "log"
+            return sum(sum(c.value for c in reg.series(name, **{key: t},
+                                                       **extra))
+                       for t in tables)
+
+        live = [n for n, t in self.tables.items()
+                if getattr(t, "store", None) is not None
+                and not t.store._closed]
+        out = {"instance": self.instance, "num_shards": self.num_shards,
+               "tables": {}, "aggregate": {}}
+        for name in live:
+            store = self.tables[name].store
+            tbl = {"engine": store.engine,
+                   "counters": store.engine_stats(),
+                   "latency_s": {op: pooled("db_op_latency_s", [name], op=op)
+                                 for op in self._METRIC_OPS},
+                   "wal": {
+                       "appends": ctr_sum("wal_appends", [name]),
+                       "append_bytes": ctr_sum("wal_append_bytes", [name]),
+                       "fsyncs": ctr_sum("wal_fsyncs", [name]),
+                       "replay_batches": ctr_sum("wal_replay_batches",
+                                                 [name]),
+                       "append_s": pooled("wal_latency_s", [name],
+                                          op="append"),
+                       "fsync_s": pooled("wal_latency_s", [name],
+                                         op="fsync"),
+                   },
+                   "shards": {}}
+            for s in range(store.S):
+                tbl["shards"][str(s)] = {
+                    "ingest_entries": ctr_sum("db_ingest_entries", [name],
+                                              shard=s),
+                    "point_queries": ctr_sum("db_point_queries", [name],
+                                             shard=s),
+                    "range_scans": ctr_sum("db_range_scans", [name],
+                                           shard=s),
+                    "flushes": ctr_sum("lsm_shard_flushes", [name], shard=s),
+                    "compactions": ctr_sum("lsm_shard_compactions", [name],
+                                           shard=s),
+                    "query_s": pooled("db_shard_op_latency_s", [name],
+                                      shard=s, op="query"),
+                    "scan_s": pooled("db_shard_op_latency_s", [name],
+                                     shard=s, op="scan"),
+                }
+            out["tables"][name] = tbl
+        agg_counters: dict = {}
+        for name in live:
+            for k, v in out["tables"][name]["counters"].items():
+                if isinstance(v, (int, float)):
+                    agg_counters[k] = agg_counters.get(k, 0) + v
+        out["aggregate"] = {
+            "counters": agg_counters,
+            "latency_s": {op: pooled("db_op_latency_s", live, op=op)
+                          for op in self._METRIC_OPS},
+            "wal": {"appends": ctr_sum("wal_appends", live),
+                    "append_bytes": ctr_sum("wal_append_bytes", live),
+                    "fsyncs": ctr_sum("wal_fsyncs", live),
+                    "fsync_s": pooled("wal_latency_s", live, op="fsync")},
+        }
+        return out
+
+    def dump_metrics(self, path: str) -> dict:
+        """Write ``metrics()`` to ``path`` as JSON; returns the snapshot."""
+        snap = self.metrics()
+        with open(path, "w") as f:
+            json.dump(snap, f, indent=1, sort_keys=True)
+        return snap
 
 
 class Table:

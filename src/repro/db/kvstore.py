@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from time import perf_counter
 from typing import Tuple
 
 import jax
@@ -36,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels.common import I32_MAX, INTERPRET
+from ..obs import default_registry, default_tracer
 from ..kernels.merge_rank import merge_sorted
 from ..kernels.merge_rank.ref import merge_sorted_ref
 from ..kernels.sorted_search import sorted_search
@@ -267,6 +269,38 @@ class ShardedTable:
         self.mem_cap = memtable_cap or max(batch_cap * 4,
                                            min(capacity_per_shard, 1 << 18))
         self._closed = False
+        # per-batch latency histograms + per-shard op counters/histograms
+        # (repro.obs; series reset here so a fresh table reads zeros)
+        self._reg = default_registry()
+        self._trace = default_tracer()
+        self._h_ingest = self._reg.histogram("db_op_latency_s", table=name,
+                                             op="ingest")
+        self._h_query = self._reg.histogram("db_op_latency_s", table=name,
+                                            op="query")
+        self._h_scan = self._reg.histogram("db_op_latency_s", table=name,
+                                           op="scan")
+        self._c_shard_ingest = [
+            self._reg.counter("db_ingest_entries", table=name, shard=s)
+            for s in range(num_shards)]
+        self._c_shard_query = [
+            self._reg.counter("db_point_queries", table=name, shard=s)
+            for s in range(num_shards)]
+        self._c_shard_scan = [
+            self._reg.counter("db_range_scans", table=name, shard=s)
+            for s in range(num_shards)]
+        self._h_shard_query = [
+            self._reg.histogram("db_shard_op_latency_s", table=name,
+                                shard=s, op="query")
+            for s in range(num_shards)]
+        self._h_shard_scan = [
+            self._reg.histogram("db_shard_op_latency_s", table=name,
+                                shard=s, op="scan")
+            for s in range(num_shards)]
+        for inst in ([self._h_ingest, self._h_query, self._h_scan]
+                     + self._c_shard_ingest + self._c_shard_query
+                     + self._c_shard_scan + self._h_shard_query
+                     + self._h_shard_scan):
+            inst.reset()
         if engine == "lsm":
             from .lsm.bloom import BITS_PER_KEY, NUM_HASHES
             from .lsm.engine import LSMRuns
@@ -277,13 +311,29 @@ class ShardedTable:
                                     else bloom_bits_per_key),
                 bloom_hashes=(NUM_HASHES if bloom_hashes is None
                               else bloom_hashes),
-                id_capacity=id_capacity)
+                id_capacity=id_capacity, name=name)
             self.tablets = None
+            self._ctr_single = None
         else:
             self._runs = None
             self.tablets = jax.tree.map(
                 lambda *xs: jnp.stack(xs),
                 *[tablet_empty(self.cap)] * num_shards)
+            # same counter schema as the LSM engine (zeros where an op
+            # doesn't apply) so A/B stats line up — satellite of ISSUE 6
+            from .lsm.engine import STAT_KEYS
+            self._ctr_single = {
+                k: self._reg.counter("lsm_" + k, table=name)
+                for k in STAT_KEYS}
+            self._c_shard_flush_single = [
+                self._reg.counter("lsm_shard_flushes", table=name, shard=s)
+                for s in range(num_shards)]
+            self._h_flush_single = self._reg.histogram(
+                "db_op_latency_s", table=name, op="flush")
+            for inst in (list(self._ctr_single.values())
+                         + self._c_shard_flush_single
+                         + [self._h_flush_single]):
+                inst.reset()
         self._mem_r = jnp.full((num_shards, self.mem_cap), I32_MAX, jnp.int32)
         self._mem_c = jnp.full((num_shards, self.mem_cap), I32_MAX, jnp.int32)
         self._mem_v = jnp.zeros((num_shards, self.mem_cap), jnp.float32)
@@ -356,14 +406,20 @@ class ShardedTable:
                 self.tablets, self._mem_r, self._mem_c, self._mem_v))
 
     def engine_stats(self) -> dict:
-        """Observability: flush/compaction counts and bloom skip rates."""
+        """Observability: flush/compaction counts and bloom skip rates.
+        Both engines emit the SAME counter schema (the single-run engine
+        reports zeros where an op doesn't apply) so A/B comparisons in
+        BENCH_ingest.json line up."""
         if self.engine == "lsm":
             st = dict(self._runs.stats)
             st["l0_used"] = [int(x) for x in self._runs.l0_used]
             st["level_entries"] = [int(lv["n"].sum())
                                    for lv in self._runs.levels]
             return st
-        return {}
+        st = {k: int(c.value) for k, c in self._ctr_single.items()}
+        st["l0_used"] = [0] * self.S
+        st["level_entries"] = []
+        return st
 
     def nnz(self) -> int:
         self._check_open()
@@ -406,6 +462,13 @@ class ShardedTable:
         n = len(rows)
         if n == 0:
             return
+        t0 = perf_counter()
+        with self._trace.span("ingest", table=self.name, n=n):
+            self._insert_batch(rows, cols, vals, _log)
+        self._h_ingest.observe(perf_counter() - t0)
+
+    def _insert_batch(self, rows, cols, vals, _log):
+        n = len(rows)
         if n > self.mem_cap:
             raise OverflowError(f"batch {n} exceeds memtable {self.mem_cap}")
         if _log and self._wal is not None:
@@ -414,6 +477,9 @@ class ShardedTable:
         order = np.argsort(dest, kind="stable")
         dest, rows, cols, vals = dest[order], rows[order], cols[order], vals[order]
         counts_b = np.bincount(dest, minlength=self.S)
+        if self._reg.enabled:
+            for s in np.nonzero(counts_b)[0]:
+                self._c_shard_ingest[s].inc(int(counts_b[s]))
         if (self._mem_n + counts_b > self.mem_cap).any():
             self.flush()
         ends = np.cumsum(counts_b)
@@ -464,14 +530,20 @@ class ShardedTable:
         if self.engine == "lsm":
             self._runs.flush_memtable(self._mem_r, self._mem_c, self._mem_v)
         else:
-            new = self._insert(self.tablets, self._mem_r, self._mem_c,
-                               self._mem_v)
-            if int(new.n.max()) > self.cap:
-                raise OverflowError(
-                    f"tablet overflow in {self.name}: "
-                    f"{int(new.n.max())} > {self.cap}")
-            self.tablets = new
+            t0 = perf_counter()
+            with self._trace.span("flush", table=self.name):
+                new = self._insert(self.tablets, self._mem_r, self._mem_c,
+                                   self._mem_v)
+                if int(new.n.max()) > self.cap:
+                    raise OverflowError(
+                        f"tablet overflow in {self.name}: "
+                        f"{int(new.n.max())} > {self.cap}")
+                self.tablets = new
             self._shard_views.clear()
+            self._h_flush_single.observe(perf_counter() - t0)
+            self._ctr_single["flushes"].inc()
+            for s in np.nonzero(self._mem_n)[0]:
+                self._c_shard_flush_single[s].inc()
         self._mem_r = jnp.full((self.S, self.mem_cap), I32_MAX, jnp.int32)
         self._mem_c = jnp.full((self.S, self.mem_cap), I32_MAX, jnp.int32)
         self._mem_v = jnp.zeros((self.S, self.mem_cap), jnp.float32)
@@ -527,12 +599,15 @@ class ShardedTable:
         the old unconditional global flush).
         """
         self._check_open()
+        t_call = perf_counter()
         row_ids = np.asarray(row_ids, np.int32)
         owner = shard_of(row_ids, self.S, self.id_capacity)
         out_r, out_c, out_v = [], [], []
         if self.engine == "lsm":
             for s in np.unique(owner):
                 q = row_ids[owner == s]
+                self._c_shard_query[int(s)].inc(len(q))
+                t_sh = perf_counter()
                 # duplicate query ids return duplicate results (legacy-
                 # engine parity): query unique ids, then re-expand
                 uq, ucnt = np.unique(q, return_counts=True)
@@ -566,6 +641,7 @@ class ShardedTable:
                     rep = ucnt[np.searchsorted(uq, r)]
                     r, c, v = (np.repeat(r, rep), np.repeat(c, rep),
                                np.repeat(v, rep))
+                self._h_shard_query[int(s)].observe(perf_counter() - t_sh)
                 out_r.append(r); out_c.append(c); out_v.append(v)
         else:
             owners = np.unique(owner)
@@ -573,6 +649,8 @@ class ShardedTable:
                 self.flush()
             for s in owners:
                 q = row_ids[owner == s]
+                self._c_shard_query[int(s)].inc(len(q))
+                t_sh = perf_counter()
                 t = self._shard_views.get(int(s))
                 if t is None:  # slicing stacked arrays copies ~MBs; cache it
                     t = jax.tree.map(lambda x: x[s], self.tablets)
@@ -588,9 +666,12 @@ class ShardedTable:
                 ok = np.asarray(ok)
                 cols, vals = np.asarray(cols), np.asarray(vals)
                 qi, ki = np.nonzero(ok)
+                self._h_shard_query[int(s)].observe(perf_counter() - t_sh)
                 out_r.append(q[qi])
                 out_c.append(cols[qi, ki])
                 out_v.append(vals[qi, ki])
+        if len(row_ids):
+            self._h_query.observe(perf_counter() - t_call)
         if not out_r:
             z = np.zeros(0, np.int32)
             return z, z.copy(), np.zeros(0, np.float32)
@@ -608,6 +689,7 @@ class ShardedTable:
         is filtered on the host (the A/B baseline); the legacy single-run
         engine flushes and slices its sorted run by the endpoint ranks."""
         self._check_open()
+        t_call = perf_counter()
         lo, hi = int(lo), int(hi)
         out_r, out_c, out_v = [], [], []
         if hi > lo:
@@ -618,6 +700,8 @@ class ShardedTable:
                 if self._mem_n[s_lo:s_hi + 1].max(initial=0) > 0:
                     self.flush()
             for s in range(s_lo, s_hi + 1):
+                self._c_shard_scan[s].inc()
+                t_sh = perf_counter()
                 if self.engine == "lsm":
                     mem_n = int(self._mem_n[s])
                     mh = self._mem_host(s)
@@ -650,8 +734,10 @@ class ShardedTable:
                     r = rows[a:b]
                     c = np.asarray(t.cols)[a:b]
                     v = np.asarray(t.vals)[a:b]
+                self._h_shard_scan[s].observe(perf_counter() - t_sh)
                 if len(r):
                     out_r.append(r); out_c.append(c); out_v.append(v)
+            self._h_scan.observe(perf_counter() - t_call)
         if not out_r:
             z = np.zeros(0, np.int32)
             return z, z.copy(), np.zeros(0, np.float32)

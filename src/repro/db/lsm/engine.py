@@ -41,6 +41,7 @@ shard compacts its peers early — harmless, entries just move down a level).
 from __future__ import annotations
 
 import functools
+from time import perf_counter
 from typing import List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -48,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...kernels.common import I32_MAX, INTERPRET
+from ...obs import default_registry, default_tracer
 from ...kernels.merge_rank import kway_merge
 from ...kernels.sorted_search import (sorted_search_batched,
                                       sorted_search_endpoints)
@@ -588,6 +590,13 @@ def _prep_mem(mem_host: Optional[Tuple], mem_sorted: bool):
             jnp.pad(mv, (0, pad))), "raw"
 
 
+# counter schema shared by BOTH engines ("single" reports zeros where an
+# op doesn't apply) so A/B stats line up in BENCH_ingest.json
+STAT_KEYS = ("flushes", "major_compactions", "runs_probed", "runs_skipped",
+             "fused_dispatches", "fused_widen_retries", "scan_dispatches",
+             "scan_widen_retries")
+
+
 # ------------------------------------------------------------------ engine
 class LSMRuns:
     """The leveled run structure for S shards (no memtable — that stays in
@@ -604,9 +613,10 @@ class LSMRuns:
                  l0_slots: int = 4, fanout: int = 4,
                  bloom_bits_per_key: Union[int, Sequence[int]] = BITS_PER_KEY,
                  bloom_hashes: Union[int, Sequence[int]] = NUM_HASHES,
-                 id_capacity: int = 1 << 22):
+                 id_capacity: int = 1 << 22, name: str = "lsm"):
         assert mem_cap >= 8, "LSM memtable too small to index"
         self.S = num_shards
+        self.name = name
         self.cap = capacity_per_shard
         self.mem_cap = mem_cap
         self.combiner = combiner
@@ -659,18 +669,41 @@ class LSMRuns:
                 "minr": np.full((S,), I32_MAX, np.int64),
                 "maxr": np.full((S,), -1, np.int64),
             })
-        # read-path observability (tests assert blooms actually skip work
-        # and that the fused path really is one dispatch per point read /
-        # range scan)
-        self.stats = {"flushes": 0, "major_compactions": 0,
-                      "runs_probed": 0, "runs_skipped": 0,
-                      "fused_dispatches": 0, "fused_widen_retries": 0,
-                      "scan_dispatches": 0, "scan_widen_retries": 0}
+        # read/write-path observability: the old ad-hoc stats dict is now
+        # registry counters labeled by table name (the `.stats` property
+        # keeps the dict view). Series are reset at construction so a
+        # fresh engine reads zeros, same as the dict did — two LIVE
+        # engines sharing one table name share (and clobber) series,
+        # which only test code does.
+        self._reg = default_registry()
+        self._trace = default_tracer()
+        self._ctr = {k: self._reg.counter("lsm_" + k, table=name)
+                     for k in STAT_KEYS}
+        self._c_shard_flush = [
+            self._reg.counter("lsm_shard_flushes", table=name, shard=s)
+            for s in range(S)]
+        self._c_shard_compact = [
+            self._reg.counter("lsm_shard_compactions", table=name, shard=s)
+            for s in range(S)]
+        self._h_flush = self._reg.histogram("db_op_latency_s", table=name,
+                                            op="flush")
+        self._h_compact = self._reg.histogram("db_op_latency_s", table=name,
+                                              op="major_compaction")
+        for inst in ([self._h_flush, self._h_compact]
+                     + list(self._ctr.values())
+                     + self._c_shard_flush + self._c_shard_compact):
+            inst.reset()
         # per-run sliced views of the stacked arrays (slicing copies ~MBs
         # eagerly per query otherwise); invalidated on flush/compaction.
         # Fused-path entries key ("fused", s) and hold the level tuple +
         # L0 stack views handed to the single-dispatch query.
         self._view_cache: dict = {}
+
+    @property
+    def stats(self) -> dict:
+        """Backward-compatible dict view of the registry counters (the old
+        ad-hoc stats dict). Read-only: a fresh dict per access."""
+        return {k: int(c.value) for k, c in self._ctr.items()}
 
     def warmup(self, mem_r, mem_c, mem_v) -> None:
         """Compile the flush + every compaction depth's graph by running
@@ -696,6 +729,12 @@ class LSMRuns:
         are major-compacted first — peers keep their L0 runs untouched.
         May raise OverflowError (capacity back-pressure, like the legacy
         engine)."""
+        t0 = perf_counter()
+        with self._trace.span("flush", table=self.name):
+            self._flush_memtable(mem_r, mem_c, mem_v)
+        self._h_flush.observe(perf_counter() - t0)
+
+    def _flush_memtable(self, mem_r, mem_c, mem_v) -> None:
         rr, cc, vv, n, bb, ff, mn, mx = _flush_fn(
             self.combiner, self._w0, self._b0, self._h0)(mem_r, mem_c, mem_v)
         n_host = np.asarray(n).astype(np.int64)
@@ -718,7 +757,9 @@ class LSMRuns:
         self._view_cache = {k: v for k, v in self._view_cache.items()
                             if k[0] not in ("l0", "fused")}
         self.l0_used = self.l0_used + landing.astype(np.int64)
-        self.stats["flushes"] += 1
+        self._ctr["flushes"].inc()
+        for s in sidx:
+            self._c_shard_flush[s].inc()
         full = self.l0_used >= self.K0
         if full.any():
             self.major_compact(mask=full)
@@ -748,6 +789,13 @@ class LSMRuns:
         mask = np.asarray(mask, bool)
         if not mask.any():
             return
+        t0 = perf_counter()
+        with self._trace.span("major_compact", table=self.name,
+                              shards=int(mask.sum())):
+            self._major_compact(mask)
+        self._h_compact.observe(perf_counter() - t0)
+
+    def _major_compact(self, mask: np.ndarray) -> None:
         d = self._pick_depth(mask)
         target = self.levels[d]
         # deepest first = oldest first (kway_merge contract)
@@ -799,7 +847,9 @@ class LSMRuns:
             lv["minr"][mask] = I32_MAX
             lv["maxr"][mask] = -1
         self._view_cache.clear()
-        self.stats["major_compactions"] += 1
+        self._ctr["major_compactions"].inc()
+        for s in np.flatnonzero(mask):
+            self._c_shard_compact[s].inc()
 
     # ------------------------------------------------------------ read path
     def resident_runs(self, s: int) -> int:
@@ -894,25 +944,32 @@ class LSMRuns:
         fn = _fused_query_fn(self.combiner, blocks, hashes, self._b0,
                              self._h0, r_ret, mem_mode, pack,
                              self.use_pallas)
-        self.stats["fused_dispatches"] += 1
-        out = fn(q_pad, levels, l0, mem)
-        cols_s, vals_s, keep, cnt_max, hits = (np.asarray(x) for x in out)
-        if int(cnt_max) > r_ret:  # widen + retry (batch-scanner semantics)
-            self.stats["fused_widen_retries"] += 1
-            self.stats["fused_dispatches"] += 1
-            fn = _fused_query_fn(self.combiner, blocks, hashes, self._b0,
-                                 self._h0, _bucket(int(cnt_max)), mem_mode,
-                                 pack, self.use_pallas)
-            out = fn(q_pad, levels, l0, mem)
-            cols_s, vals_s, keep, cnt_max, hits = (np.asarray(x)
-                                                   for x in out)
+        tr = self._trace
+        self._ctr["fused_dispatches"].inc()
+        with tr.span("query.fused", table=self.name, shard=s, n_q=n_q):
+            with tr.span("dispatch"):
+                out = fn(q_pad, levels, l0, mem)
+            with tr.span("host_sync"):
+                cols_s, vals_s, keep, cnt_max, hits = \
+                    tuple(np.asarray(x) for x in out)
+            if int(cnt_max) > r_ret:  # widen + retry (scanner semantics)
+                self._ctr["fused_widen_retries"].inc()
+                self._ctr["fused_dispatches"].inc()
+                with tr.span("widen_retry", width=int(cnt_max)):
+                    fn = _fused_query_fn(self.combiner, blocks, hashes,
+                                         self._b0, self._h0,
+                                         _bucket(int(cnt_max)), mem_mode,
+                                         pack, self.use_pallas)
+                    out = fn(q_pad, levels, l0, mem)
+                    cols_s, vals_s, keep, cnt_max, hits = \
+                        tuple(np.asarray(x) for x in out)
         # observability: hits = [resident levels deepest-first, used slots]
+        probed, skipped = self._ctr["runs_probed"], self._ctr["runs_skipped"]
         for i in range(len(live)):
-            self.stats["runs_probed" if hits[i] else "runs_skipped"] += 1
+            (probed if hits[i] else skipped).inc()
         for k in range(int(self.l0_used[s])):
             if self.l0_n[s, k]:
-                self.stats["runs_probed" if hits[len(live) + k]
-                           else "runs_skipped"] += 1
+                (probed if hits[len(live) + k] else skipped).inc()
         keep = keep[:n_q]
         qi, ki = np.nonzero(keep)
         return (q[qi].astype(np.int32), cols_s[:n_q][qi, ki],
@@ -959,17 +1016,24 @@ class LSMRuns:
         w = _bucket(width, lo=16)
         fn = _fused_scan_fn(self.combiner, blocks, self._b0, w, mem_mode,
                             self.id_capacity, self.use_pallas)
-        self.stats["scan_dispatches"] += 1
-        out = fn(lohi, levels, l0, mem)
-        rows_s, cols_s, vals_s, keep, cnt_max = (np.asarray(x) for x in out)
-        if int(cnt_max) > w:  # widen + retry (batch-scanner semantics)
-            self.stats["scan_widen_retries"] += 1
-            self.stats["scan_dispatches"] += 1
-            fn = _fused_scan_fn(self.combiner, blocks, self._b0,
-                                _bucket(int(cnt_max)), mem_mode,
-                                self.id_capacity, self.use_pallas)
-            out = fn(lohi, levels, l0, mem)
-            rows_s, cols_s, vals_s, keep, _ = (np.asarray(x) for x in out)
+        tr = self._trace
+        self._ctr["scan_dispatches"].inc()
+        with tr.span("scan.fused", table=self.name, shard=s, lo=lo, hi=hi):
+            with tr.span("dispatch"):
+                out = fn(lohi, levels, l0, mem)
+            with tr.span("host_sync"):
+                rows_s, cols_s, vals_s, keep, cnt_max = \
+                    tuple(np.asarray(x) for x in out)
+            if int(cnt_max) > w:  # widen + retry (batch-scanner semantics)
+                self._ctr["scan_widen_retries"].inc()
+                self._ctr["scan_dispatches"].inc()
+                with tr.span("widen_retry", width=int(cnt_max)):
+                    fn = _fused_scan_fn(self.combiner, blocks, self._b0,
+                                        _bucket(int(cnt_max)), mem_mode,
+                                        self.id_capacity, self.use_pallas)
+                    out = fn(lohi, levels, l0, mem)
+                    rows_s, cols_s, vals_s, keep, _ = \
+                        tuple(np.asarray(x) for x in out)
         ki = np.flatnonzero(keep)
         return (rows_s[ki].astype(np.int32), cols_s[ki].astype(np.int32),
                 vals_s[ki].astype(np.float32))
@@ -994,7 +1058,7 @@ class LSMRuns:
                 self._iter_runs_oldest_first(s):
             age += 1
             if q_sorted[-1] < minr or q_sorted[0] > maxr:
-                self.stats["runs_skipped"] += 1
+                self._ctr["runs_skipped"].inc()
                 continue
             out = run_query_gated(rows, cols, vals, fence, bloom, q_dev,
                                   max_return, block, hashes)
@@ -1002,9 +1066,9 @@ class LSMRuns:
         cand_r, cand_c, cand_v, cand_a = [], [], [], []
         for age_i, run, (any_hit, cols_o, vals_o, ok, cnt) in launched:
             if not bool(any_hit):  # bloom says absent — search was skipped
-                self.stats["runs_skipped"] += 1
+                self._ctr["runs_skipped"].inc()
                 continue
-            self.stats["runs_probed"] += 1
+            self._ctr["runs_probed"].inc()
             cnt = np.asarray(cnt)
             if cnt.max(initial=0) > max_return:  # widen + retry (scanner)
                 rows, cols, vals, fence, block = run

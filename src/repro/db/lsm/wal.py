@@ -21,14 +21,23 @@ from __future__ import annotations
 import os
 import struct
 import zlib
+from time import perf_counter
 from typing import Iterator, Optional, Tuple
 
 import numpy as np
+
+from ...obs import default_registry, default_tracer
 
 _HEADER = b"RLSMWAL1"
 _REC = struct.Struct("<II")
 
 Batch = Tuple[np.ndarray, np.ndarray, np.ndarray]
+
+
+def _wal_label(path: str) -> str:
+    """Metric label for a log file: its parent dir name (the wal_dir is
+    per-table), falling back to the basename."""
+    return os.path.basename(os.path.dirname(path)) or os.path.basename(path)
 
 
 class WriteAheadLog:
@@ -42,19 +51,36 @@ class WriteAheadLog:
         if not exists:
             self._f.write(_HEADER)
             self._f.flush()
+        reg = default_registry()
+        self._trace = default_tracer()
+        log = _wal_label(path)
+        self._c_appends = reg.counter("wal_appends", log=log)
+        self._c_bytes = reg.counter("wal_append_bytes", log=log)
+        self._c_fsyncs = reg.counter("wal_fsyncs", log=log)
+        self._h_append = reg.histogram("wal_latency_s", log=log, op="append")
+        self._h_fsync = reg.histogram("wal_latency_s", log=log, op="fsync")
 
     # ------------------------------------------------------------ writing
     def append(self, rows: np.ndarray, cols: np.ndarray,
                vals: np.ndarray) -> int:
         """Log one batch; returns the byte offset AFTER the record."""
-        payload = (np.asarray(rows, "<i4").tobytes()
-                   + np.asarray(cols, "<i4").tobytes()
-                   + np.asarray(vals, "<f4").tobytes())
-        self._f.write(_REC.pack(len(rows), zlib.crc32(payload)))
-        self._f.write(payload)
-        self._f.flush()
-        if self.sync:
-            os.fsync(self._f.fileno())
+        t0 = perf_counter()
+        with self._trace.span("wal.append", log=_wal_label(self.path),
+                              n=len(rows)):
+            payload = (np.asarray(rows, "<i4").tobytes()
+                       + np.asarray(cols, "<i4").tobytes()
+                       + np.asarray(vals, "<f4").tobytes())
+            self._f.write(_REC.pack(len(rows), zlib.crc32(payload)))
+            self._f.write(payload)
+            self._f.flush()
+            if self.sync:
+                t1 = perf_counter()
+                os.fsync(self._f.fileno())
+                self._c_fsyncs.inc()
+                self._h_fsync.observe(perf_counter() - t1)
+        self._c_appends.inc()
+        self._c_bytes.inc(_REC.size + len(payload))
+        self._h_append.observe(perf_counter() - t0)
         return self._f.tell()
 
     def tell(self) -> int:
@@ -106,6 +132,12 @@ class WriteAheadLog:
         """
         if not os.path.exists(path):
             return
+        reg = default_registry()
+        log = _wal_label(path)
+        c_batches = reg.counter("wal_replay_batches", log=log)
+        c_bytes = reg.counter("wal_replay_bytes", log=log)
+        h_replay = reg.histogram("wal_latency_s", log=log, op="replay")
+        t0 = perf_counter()
         with open(path, "rb") as f:
             if f.read(len(_HEADER)) != _HEADER:
                 return
@@ -114,12 +146,15 @@ class WriteAheadLog:
             while True:
                 head = f.read(_REC.size)
                 if len(head) < _REC.size:
-                    return
+                    break
                 n, crc = _REC.unpack(head)
                 payload = f.read(12 * n)
                 if len(payload) < 12 * n or zlib.crc32(payload) != crc:
-                    return  # torn/corrupt tail
+                    break  # torn/corrupt tail
                 rows = np.frombuffer(payload[: 4 * n], "<i4")
                 cols = np.frombuffer(payload[4 * n: 8 * n], "<i4")
                 vals = np.frombuffer(payload[8 * n:], "<f4")
+                c_batches.inc()
+                c_bytes.inc(_REC.size + len(payload))
                 yield rows, cols, vals
+        h_replay.observe(perf_counter() - t0)

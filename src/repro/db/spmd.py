@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from time import perf_counter
 from typing import Tuple
 
 import jax
@@ -24,10 +25,42 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..kernels.common import I32_MAX
+from ..obs import default_registry, merge_snapshots
 from .kvstore import Tablet, shard_of_dev, tablet_insert
 
 from ..compat import SHARD_MAP_KW as _SHARD_MAP_KW
 from ..compat import shard_map as _shard_map
+
+
+def _instrumented(fn, op: str):
+    """Host-side step instrumentation: per-process step counters + dispatch
+    wall-time histograms (JAX dispatch is async; the histogram measures
+    enqueue cost, not device compute). The raw jitted fn stays reachable as
+    ``step.__wrapped__`` for callers that re-jit / AOT-lower the step
+    (launch/ingest.py does)."""
+    reg = default_registry()
+    c_steps = reg.counter("spmd_steps", op=op)
+    h_step = reg.histogram("db_op_latency_s", table="spmd", op=op)
+
+    def step(*args, **kw):
+        if not reg.enabled:
+            return fn(*args, **kw)
+        t0 = perf_counter()
+        out = fn(*args, **kw)
+        c_steps.inc()
+        h_step.observe(perf_counter() - t0)
+        return out
+
+    step.__wrapped__ = fn
+    step.__name__ = f"spmd_{op}_step"
+    return step
+
+
+def merge_process_metrics(snapshots) -> dict:
+    """Merge per-process ``Registry.snapshot()`` dicts at the host (SPMD
+    launchers run one registry per process): counters sum, histograms
+    bucket-merge with recomputed percentiles."""
+    return merge_snapshots(snapshots)
 
 
 def _bucket_local(br, bc, bv, num_shards: int, id_capacity: int):
@@ -67,7 +100,7 @@ def make_spmd_ingest_step(mesh, axis: str, num_shards: int, id_capacity: int,
                     in_specs=(spec_t, P(axis, None), P(axis, None),
                               P(axis, None)),
                     out_specs=spec_t, **_SHARD_MAP_KW)
-    return jax.jit(fn)
+    return _instrumented(jax.jit(fn), "spmd_ingest")
 
 
 def stacked_empty(num_shards: int, capacity: int) -> Tablet:
@@ -150,7 +183,7 @@ def make_spmd_lsm_ingest_step(mesh, axis: str, num_shards: int,
                     in_specs=(_l0_spec(axis), P(axis, None), P(axis, None),
                               P(axis, None)),
                     out_specs=_l0_spec(axis), **_SHARD_MAP_KW)
-    return jax.jit(fn)
+    return _instrumented(jax.jit(fn), "spmd_lsm_ingest")
 
 
 def make_spmd_lsm_query_step(mesh, axis: str, combiner: str = "last",
@@ -216,7 +249,7 @@ def make_spmd_lsm_query_step(mesh, axis: str, combiner: str = "last",
                               P(axis, None)),
                     out_specs=(P(axis, None, None), P(axis, None, None),
                                P(axis, None, None)), **_SHARD_MAP_KW)
-    return jax.jit(fn)
+    return _instrumented(jax.jit(fn), "spmd_lsm_query")
 
 
 def make_spmd_lsm_scan_step(mesh, axis: str, combiner: str = "last",
@@ -276,7 +309,7 @@ def make_spmd_lsm_scan_step(mesh, axis: str, combiner: str = "last",
                     in_specs=(_l0_spec(axis), spec_t, P(axis, None)),
                     out_specs=(P(axis, None), P(axis, None), P(axis, None),
                                P(axis, None), P(axis)), **_SHARD_MAP_KW)
-    return jax.jit(fn)
+    return _instrumented(jax.jit(fn), "spmd_lsm_scan")
 
 
 def make_spmd_lsm_compact_step(mesh, axis: str, combiner: str = "last",
@@ -317,4 +350,4 @@ def make_spmd_lsm_compact_step(mesh, axis: str, combiner: str = "last",
     fn = _shard_map(shard_fn, mesh=mesh,
                     in_specs=(_l0_spec(axis), spec_t),
                     out_specs=(_l0_spec(axis), spec_t), **_SHARD_MAP_KW)
-    return jax.jit(fn)
+    return _instrumented(jax.jit(fn), "spmd_lsm_compact")

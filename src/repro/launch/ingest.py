@@ -29,7 +29,10 @@ def dryrun(multi_pod: bool, capacity: int = 1 << 20, batch_cap: int = 1 << 15):
     # ingest axis = flattened (pod, data): one ingestor per data shard
     from ..compat import make_mesh_auto
     flat = make_mesh_auto((s,), ("data",), devices=jax.devices()[:s])
+    # unwrap the host-side metrics wrapper: AOT lowering wants the raw
+    # jitted step (tracing through the wrapper would count trace-time)
     step = make_spmd_ingest_step(flat, "data", s, id_capacity=1 << 22)
+    step = getattr(step, "__wrapped__", step)
     tablets = stacked_empty(s, capacity)
     sh2 = NamedSharding(flat, P("data", None))
     sh1 = NamedSharding(flat, P("data"))

@@ -1,0 +1,144 @@
+"""Per-op span tracing: nested wall-time spans in a bounded ring buffer,
+a slow-op log, and Chrome-trace / plain-JSON export.
+
+    with span("flush", table="t", shard=3):
+        ...
+        with span("host_sync", table="t"):
+            ...
+
+Spans record host wall time. Under JAX async dispatch that means a
+"dispatch" span measures enqueue cost and a "host_sync" span measures the
+device round-trip — which is exactly the split the fused read path is
+designed around (one dispatch + one sync per query batch).
+
+Disabled mode hands back a shared no-op context manager: the only cost at
+a call site is one attribute check and one function call.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from collections import deque
+
+
+class _NullSpan:
+    """Shared do-nothing context manager for the disabled path."""
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _Span:
+    __slots__ = ("tracer", "name", "labels", "t0", "ts", "depth", "parent")
+
+    def __init__(self, tracer, name, labels):
+        self.tracer = tracer
+        self.name = name
+        self.labels = labels
+
+    def __enter__(self):
+        tr = self.tracer
+        stack = tr._stack()
+        self.depth = len(stack)
+        self.parent = stack[-1].name if stack else None
+        stack.append(self)
+        self.ts = time.time()
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        dur = time.perf_counter() - self.t0
+        tr = self.tracer
+        stack = tr._stack()
+        if stack and stack[-1] is self:
+            stack.pop()
+        rec = {"name": self.name, "ts": self.ts, "dur": dur,
+               "depth": self.depth, "parent": self.parent,
+               "tid": threading.get_ident()}
+        if self.labels:
+            rec["labels"] = self.labels
+        tr._ring.append(rec)
+        if dur >= tr.slow_threshold_s:
+            tr._slow.append(rec)
+        return False
+
+
+class Tracer:
+    def __init__(self, capacity: int = 8192, slow_threshold_s: float = 0.050,
+                 slow_capacity: int = 256, enabled: bool = True):
+        self.enabled = enabled
+        self.slow_threshold_s = slow_threshold_s
+        self._ring = deque(maxlen=capacity)
+        self._slow = deque(maxlen=slow_capacity)
+        self._local = threading.local()
+
+    def _stack(self):
+        st = getattr(self._local, "stack", None)
+        if st is None:
+            st = self._local.stack = []
+        return st
+
+    def span(self, name: str, **labels):
+        if not self.enabled:
+            return _NULL_SPAN
+        return _Span(self, name, labels)
+
+    # -- inspection / export ----------------------------------------------
+    def spans(self):
+        """Ring-buffer contents, oldest first."""
+        return list(self._ring)
+
+    def slow_ops(self):
+        """Spans that exceeded slow_threshold_s, oldest first."""
+        return list(self._slow)
+
+    def clear(self):
+        self._ring.clear()
+        self._slow.clear()
+
+    def export_json(self, path: str):
+        with open(path, "w") as f:
+            json.dump({"slow_threshold_s": self.slow_threshold_s,
+                       "spans": self.spans(),
+                       "slow_ops": self.slow_ops()}, f, indent=1)
+
+    def export_chrome(self, path: str):
+        """chrome://tracing / Perfetto 'complete' (ph=X) events, one per
+        span, ts/dur in microseconds."""
+        events = []
+        for rec in self._ring:
+            events.append({
+                "name": rec["name"], "cat": "repro.db", "ph": "X",
+                "ts": rec["ts"] * 1e6, "dur": rec["dur"] * 1e6,
+                "pid": 0, "tid": rec["tid"],
+                "args": dict(rec.get("labels", {}),
+                             depth=rec["depth"], parent=rec["parent"]),
+            })
+        with open(path, "w") as f:
+            json.dump({"traceEvents": events,
+                       "displayTimeUnit": "ms"}, f, indent=1)
+
+
+# ------------------------------------------------------------------ globals
+_DEFAULT = Tracer()
+
+
+def default_tracer() -> Tracer:
+    return _DEFAULT
+
+
+def span(name: str, **labels):
+    """Span on the process-global default tracer."""
+    return _DEFAULT.span(name, **labels)
+
+
+def set_tracing(on: bool):
+    _DEFAULT.enabled = bool(on)

@@ -3,7 +3,8 @@ stay green within the threshold (acceptance bar for the gate job), and its
 markdown summary must land in $GITHUB_STEP_SUMMARY."""
 import json
 
-from benchmarks.gate import compare, extract_ratios, main, markdown
+from benchmarks.gate import (compare, extract_ratios, extract_tail_ratios,
+                             main, markdown, tail_markdown)
 
 BASE_QUERY = {
     "rows": [{"fused_speedup": 1.8}, {"fused_speedup": 1.5}],
@@ -74,6 +75,45 @@ def test_main_exit_codes_and_step_summary(tmp_path, monkeypatch):
     assert main(["--baseline-ingest", str(tmp_path / "none1.json"),
                  "--baseline-query", str(tmp_path / "none2.json"),
                  "--new-ingest", str(bi), "--new-query", str(bq)]) == 0
+
+
+def test_tail_ratios_are_advisory_only(tmp_path, monkeypatch):
+    """Tail-latency (p99/p50) ratios ride along in the summary but can
+    NEVER turn the gate red — even a 100x tail blowup must exit 0 while
+    still being visible in the advisory table."""
+    ingest = {"lsm_ingest_speedup": 1.4,
+              "engines": {"lsm": {"ingest_batch_p50_ms": 1.0,
+                                  "ingest_batch_p99_ms": 8.0,
+                                  "query_p50_ms": 0.5,
+                                  "query_p99_ms": 2.0}}}
+    query = {"rows": [{"fused_speedup": 1.5, "fused_p50_us": 100.0,
+                       "fused_p99_us": 400.0}],
+             "scan_rows": [{"range_len": 64, "scan_speedup": 2.2,
+                            "scan_p50_us": 200.0, "scan_p99_us": 900.0}]}
+    tails = extract_tail_ratios(ingest, query)
+    assert tails == {"lsm_ingest_p99_over_p50": 8.0,
+                     "lsm_query_p99_over_p50": 4.0,
+                     "fused_read_p99_over_p50": 4.0,
+                     "scan_p99_over_p50": 4.5}
+    # old artifacts without tail fields -> no table at all
+    assert extract_tail_ratios(BASE_INGEST, BASE_QUERY) == {}
+    assert tail_markdown({}, {}) == ""
+    # blow up every tail 100x in the fresh run; tracked ratios unchanged
+    worse = json.loads(json.dumps(query))
+    worse["rows"][0]["fused_p99_us"] *= 100
+    worse["scan_rows"][0]["scan_p99_us"] *= 100
+    bi, bq = tmp_path / "bi.json", tmp_path / "bq.json"
+    wq = tmp_path / "wq.json"
+    bi.write_text(json.dumps(ingest))
+    bq.write_text(json.dumps(query))
+    wq.write_text(json.dumps(worse))
+    summary = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+    assert main(["--baseline-ingest", str(bi), "--baseline-query", str(bq),
+                 "--new-ingest", str(bi), "--new-query", str(wq)]) == 0
+    text = summary.read_text()
+    assert "Tail latency (advisory)" in text
+    assert "fused_read_p99_over_p50" in text
 
 
 def test_markdown_table_shape():

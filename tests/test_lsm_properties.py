@@ -24,6 +24,7 @@ from _hypothesis_compat import given, settings, st
 
 from repro.db.kvstore import COMBINERS, ShardedTable
 from repro.db.lsm import engine as lsm_engine
+from repro.obs import default_registry
 from repro.kernels.common import I32_MAX
 from repro.kernels.sorted_search import (sorted_search_batched,
                                          sorted_search_batched_ref)
@@ -150,12 +151,20 @@ def test_engines_and_read_paths_agree(seed, combiner, ops):
     _check_close(got, oracle, "scan", (seed, combiner))
 
 
+def _ctr(name: str, table: str) -> int:
+    """Read one labeled counter straight from the obs registry — the
+    ground truth the engine's ``.stats`` view is derived from."""
+    series = default_registry().series(name, table=table)
+    assert len(series) == 1, (name, table, series)
+    return int(series[0].value)
+
+
 def test_fused_point_query_is_one_dispatch(monkeypatch):
     """The acceptance bar: a point query against a shard holding a
     non-empty memtable, >=2 L0 runs, and >=2 leveled runs runs exactly ONE
-    compiled-function invocation — counted via the engine's dispatch
-    counter, with every other query entry point poisoned so a stray
-    per-run launch fails loudly."""
+    compiled-function invocation — counted via the obs registry's
+    dispatch counter, with every other query entry point poisoned so a
+    stray per-run launch fails loudly."""
     st_ = ShardedTable("one_dispatch", num_shards=1,
                        capacity_per_shard=4096, batch_cap=256,
                        id_capacity=1 << 10, combiner="sum",
@@ -196,12 +205,14 @@ def test_fused_point_query_is_one_dispatch(monkeypatch):
 
     keys = np.asarray(sorted({k[0] for k in oracle}), np.int32)
     q = rng.choice(keys, 8, replace=False).astype(np.int32)
-    before = dict(st_.engine_stats())
+    before = _ctr("lsm_fused_dispatches", "one_dispatch")
+    retries0 = _ctr("lsm_fused_widen_retries", "one_dispatch")
     qr, qc, qv = st_.query_rows(np.unique(q))
-    after = st_.engine_stats()
-    assert after["fused_dispatches"] - before["fused_dispatches"] == 1, \
-        (before, after)
-    assert after["fused_widen_retries"] == before["fused_widen_retries"]
+    after = _ctr("lsm_fused_dispatches", "one_dispatch")
+    assert after - before == 1, (before, after)
+    assert _ctr("lsm_fused_widen_retries", "one_dispatch") == retries0
+    # the legacy .stats view must mirror the registry counter exactly
+    assert st_.engine_stats()["fused_dispatches"] == after
     # and the answer is still exactly right
     want = {k: v for k, v in oracle.items() if k[0] in set(q.tolist())}
     got = _as_dict(qr, qc, qv)
@@ -257,13 +268,16 @@ def test_fused_range_scan_is_one_dispatch(monkeypatch):
     monkeypatch.setattr(lsm_engine.LSMRuns, "query_shard", boom)
 
     lo, hi = 150, 700        # spans both levels, both L0 runs
-    before = dict(st_.engine_stats())
+    before = _ctr("lsm_scan_dispatches", "one_scan")
+    retries0 = _ctr("lsm_scan_widen_retries", "one_scan")
+    fused0 = _ctr("lsm_fused_dispatches", "one_scan")
     r, c, v = st_.scan_range(lo, hi, width=1024)
-    after = st_.engine_stats()
-    assert after["scan_dispatches"] - before["scan_dispatches"] == 1, \
-        (before, after)
-    assert after["scan_widen_retries"] == before["scan_widen_retries"]
-    assert after["fused_dispatches"] == before["fused_dispatches"]
+    after = _ctr("lsm_scan_dispatches", "one_scan")
+    assert after - before == 1, (before, after)
+    assert _ctr("lsm_scan_widen_retries", "one_scan") == retries0
+    assert _ctr("lsm_fused_dispatches", "one_scan") == fused0
+    # the legacy .stats view must mirror the registry counter exactly
+    assert st_.engine_stats()["scan_dispatches"] == after
     want = {k: x for k, x in oracle.items() if lo <= k[0] < hi}
     _check_close(_as_dict(r, c, v), want, "one-dispatch-scan", (lo, hi))
     # scans never flushed anything
@@ -271,8 +285,7 @@ def test_fused_range_scan_is_one_dispatch(monkeypatch):
     # widen retry: a deliberately tiny window must re-dispatch ONCE wider
     # and still return the identical result
     r2, c2, v2 = st_.scan_range(lo, hi, width=16)
-    assert st_.engine_stats()["scan_widen_retries"] \
-        == after["scan_widen_retries"] + 1
+    assert _ctr("lsm_scan_widen_retries", "one_scan") == retries0 + 1
     _check_close(_as_dict(r2, c2, v2), want, "widen-retry-scan", (lo, hi))
 
 

@@ -1,0 +1,369 @@
+"""Observability layer tests (ISSUE 6): histogram quantile accuracy vs a
+numpy oracle, labeled-series aggregation, cross-process snapshot merging,
+span nesting/ring eviction/slow-op capture, Chrome-trace export shape,
+engine counter-schema parity, DBserver.metrics(), and the disabled-mode
+overhead budget (instrumentation must cost <2% of a query when off)."""
+import json
+import math
+import time
+from time import perf_counter
+
+import numpy as np
+import pytest
+
+from repro.db import dbsetup
+from repro.db.kvstore import ShardedTable
+from repro.obs import (Counter, Gauge, Histogram, Registry, Tracer,
+                       default_registry, default_tracer, merge_snapshots,
+                       set_enabled)
+
+# histogram buckets grow by 2**(1/8): any sample's representative is
+# within ~4.4% of the true value; 12% headroom covers rank-vs-bucket
+# interaction at sparse tails
+QUANT_RTOL = 0.12
+
+
+# ------------------------------------------------------------- histograms
+def _fill(h, xs):
+    for x in xs:
+        h.observe(float(x))
+
+
+@pytest.mark.parametrize("dist", ["powerlaw", "constant", "bimodal"])
+def test_histogram_quantiles_vs_numpy_oracle(dist):
+    rng = np.random.default_rng(42)
+    n = 20_000
+    if dist == "powerlaw":          # latency-shaped heavy tail
+        xs = 1e-4 * (1.0 + rng.pareto(1.5, n))
+    elif dist == "constant":
+        xs = np.full(n, 3.7e-3)
+    else:                           # fast path + slow path mixture
+        xs = np.where(rng.random(n) < 0.9,
+                      np.abs(rng.normal(2e-4, 2e-5, n)),
+                      np.abs(rng.normal(2e-2, 2e-3, n)))
+    reg = Registry()
+    h = reg.histogram("t_lat")
+    _fill(h, xs)
+    assert h.count == n
+    assert h.min == pytest.approx(xs.min()) and h.max == pytest.approx(xs.max())
+    assert h.mean == pytest.approx(xs.mean(), rel=1e-6)
+    for q in (0.50, 0.90, 0.99, 0.999):
+        got = h.quantile(q)
+        # nearest-rank oracle (matches the histogram's rank definition)
+        want = float(np.quantile(xs, q, method="inverted_cdf"))
+        if dist == "constant":
+            assert got == pytest.approx(want, rel=1e-12), q
+        else:
+            assert got == pytest.approx(want, rel=QUANT_RTOL), (q, got, want)
+    p = h.percentiles()
+    assert set(p) == {"p50", "p90", "p99", "p999"}
+    assert p["p50"] <= p["p90"] <= p["p99"] <= p["p999"]
+
+
+def test_histogram_merge_equals_pooled():
+    """Merging two histograms must equal one histogram fed all samples —
+    exactly, bucket for bucket (same fixed layout; only float ``sum`` is
+    order-dependent)."""
+    rng = np.random.default_rng(7)
+    a, b = rng.exponential(1e-3, 5000), rng.exponential(5e-3, 3000)
+    reg = Registry()
+    ha, hb, pooled = (reg.histogram("m", part=i) for i in range(3))
+    _fill(ha, a)
+    _fill(hb, b)
+    _fill(pooled, np.concatenate([a, b]))
+    merged = reg.histogram("m", part=9)
+    merged.merge(ha)
+    merged.merge(hb)
+    assert merged._buckets == pooled._buckets
+    assert merged.count == pooled.count == 8000
+    assert merged.min == pooled.min and merged.max == pooled.max
+    assert merged.sum == pytest.approx(pooled.sum, rel=1e-9)
+    for q in (0.5, 0.99):
+        assert merged.quantile(q) == pooled.quantile(q)
+    # snapshot -> load_snapshot round-trip preserves buckets
+    h2 = reg.histogram("m", part=10)
+    h2.load_snapshot(pooled.snapshot())
+    assert h2._buckets == pooled._buckets and h2.count == pooled.count
+
+
+def test_empty_histogram_is_nan_and_snapshot_minimal():
+    h = Registry().histogram("e")
+    assert math.isnan(h.quantile(0.5)) and math.isnan(h.mean)
+    assert h.snapshot() == {"count": 0, "sum": 0.0}
+
+
+# --------------------------------------------------------------- registry
+def test_registry_series_identity_labels_and_kind_guard():
+    reg = Registry()
+    c1 = reg.counter("hits", table="t", shard=0)
+    c2 = reg.counter("hits", shard=0, table="t")   # label order irrelevant
+    assert c1 is c2
+    c1.inc()
+    c1.inc(4)
+    assert c2.value == 5
+    with pytest.raises(TypeError):
+        reg.histogram("hits", table="t", shard=0)  # kind mismatch
+    g = reg.gauge("depth", table="t")
+    g.set(3.5)
+    assert g.value == 3.5
+
+
+def test_label_aggregation_and_filtering():
+    reg = Registry()
+    for s in range(4):
+        reg.counter("ops", table="a", shard=s).inc(s + 1)
+    reg.counter("ops", table="b", shard=0).inc(100)
+    assert reg.aggregate("ops", table="a") == 1 + 2 + 3 + 4
+    assert reg.aggregate("ops") == 110
+    assert reg.aggregate("ops", table="a", shard=2) == 3
+    assert reg.aggregate("nosuch") is None
+    assert len(reg.series("ops", table="a")) == 4
+    # histogram aggregation merges across the filtered series
+    for s, v in ((0, 1e-3), (1, 4e-3)):
+        h = reg.histogram("lat", table="a", shard=s)
+        for _ in range(10):
+            h.observe(v)
+    agg = reg.aggregate("lat", table="a")
+    assert agg["count"] == 20
+    assert agg["min"] == pytest.approx(1e-3) and agg["max"] == pytest.approx(4e-3)
+
+
+def test_merge_snapshots_across_processes():
+    """Per-process registry snapshots merge at the host: counters sum,
+    histograms bucket-merge (the spmd per-process path)."""
+    snaps = []
+    for proc in range(3):
+        reg = Registry()
+        reg.counter("n_steps", op="ingest").inc(10 * (proc + 1))
+        h = reg.histogram("step_s", op="ingest")
+        for _ in range(50):
+            h.observe(1e-3 * (proc + 1))
+        snaps.append(reg.snapshot())
+    merged = merge_snapshots(snaps)
+    assert merged["n_steps{op=ingest}"] == 60
+    hs = merged["step_s{op=ingest}"]
+    assert hs["count"] == 150
+    assert hs["min"] == pytest.approx(1e-3) and hs["max"] == pytest.approx(3e-3)
+    from repro.db.spmd import merge_process_metrics
+    assert merge_process_metrics(snaps) == merged
+
+
+def test_registry_disabled_is_noop():
+    reg = Registry(enabled=False)
+    c, g, h = reg.counter("c"), reg.gauge("g"), reg.histogram("h")
+    c.inc(5)
+    g.set(2.0)
+    h.observe(1e-3)
+    assert c.value == 0 and g.value == 0.0 and h.count == 0
+    reg.enabled = True
+    c.inc(5)
+    assert c.value == 5
+
+
+# ---------------------------------------------------------------- tracing
+def test_span_nesting_and_ring_eviction():
+    tr = Tracer(capacity=4, slow_threshold_s=10.0)
+    with tr.span("outer", table="t"):
+        with tr.span("inner"):
+            pass
+    spans = tr.spans()
+    inner, outer = spans[-2], spans[-1]   # inner exits (records) first
+    assert inner["name"] == "inner" and inner["depth"] == 1 \
+        and inner["parent"] == "outer"
+    assert outer["name"] == "outer" and outer["depth"] == 0 \
+        and outer["parent"] is None
+    assert outer["labels"] == {"table": "t"}
+    assert outer["dur"] >= inner["dur"] >= 0.0
+    for i in range(6):                    # ring evicts oldest beyond cap
+        with tr.span(f"s{i}"):
+            pass
+    assert [r["name"] for r in tr.spans()] == ["s2", "s3", "s4", "s5"]
+    assert tr.slow_ops() == []            # nothing crossed 10s
+
+
+def test_slow_op_log_and_exports(tmp_path):
+    tr = Tracer(slow_threshold_s=0.005)
+    with tr.span("fast"):
+        pass
+    with tr.span("slow", table="t", shard=1):
+        time.sleep(0.012)
+    slow = tr.slow_ops()
+    assert [r["name"] for r in slow] == ["slow"]
+    assert slow[0]["dur"] >= 0.005
+    jpath, cpath = tmp_path / "trace.json", tmp_path / "chrome.json"
+    tr.export_json(str(jpath))
+    tr.export_chrome(str(cpath))
+    j = json.loads(jpath.read_text())
+    assert [s["name"] for s in j["spans"]] == ["fast", "slow"]
+    assert j["slow_threshold_s"] == 0.005
+    chrome = json.loads(cpath.read_text())
+    evs = chrome["traceEvents"]
+    assert len(evs) == 2
+    for ev in evs:
+        assert ev["ph"] == "X" and ev["cat"] == "repro.db"
+        assert ev["dur"] >= 0 and "depth" in ev["args"]
+    slow_ev = [e for e in evs if e["name"] == "slow"][0]
+    assert slow_ev["dur"] >= 5_000        # microseconds
+    assert slow_ev["args"]["table"] == "t"
+    tr.clear()
+    assert tr.spans() == [] and tr.slow_ops() == []
+
+
+def test_disabled_tracer_hands_back_shared_null_span():
+    tr = Tracer(enabled=False)
+    s1, s2 = tr.span("a"), tr.span("b", x=1)
+    assert s1 is s2                       # one shared no-op object
+    with s1:
+        pass
+    assert tr.spans() == []
+
+
+# ------------------------------------------- engine/server instrumentation
+_CFG = dict(num_shards=2, capacity_per_shard=2048, batch_cap=256,
+            id_capacity=1 << 10, memtable_cap=64, l0_slots=4)
+
+
+def _tiny(name, engine):
+    st = ShardedTable(name, engine=engine, **_CFG)
+    rng = np.random.default_rng(5)
+    r = rng.integers(0, 1 << 10, 200).astype(np.int32)
+    for i in range(0, 200, 50):           # memtable cap is 64
+        st.insert(r[i:i + 50], np.zeros(50, np.int32),
+                  np.ones(50, np.float32))
+    st.flush()
+    return st, r
+
+
+def test_engine_stats_schema_parity_single_vs_lsm():
+    """The single-run engine must emit the same counter schema as the LSM
+    engine — zeros where the op doesn't apply — so dashboards and
+    DBserver.metrics() don't special-case the engine."""
+    lsm, r = _tiny("par_lsm", "lsm")
+    single, _ = _tiny("par_single", "single")
+    ks, kl = lsm.engine_stats(), single.engine_stats()
+    assert set(ks) == set(kl)
+    for k in ("fused_dispatches", "scan_dispatches", "runs_probed",
+              "major_compactions"):
+        assert kl[k] == 0, k              # structurally n/a -> zero
+    assert kl["flushes"] >= 1 and ks["flushes"] >= 1
+    q = np.unique(r[:8])
+    lsm.query_rows(q)
+    single.query_rows(q)
+    assert lsm.engine_stats()["fused_dispatches"] >= 1
+    assert single.engine_stats()["fused_dispatches"] == 0
+
+
+def test_ingest_and_query_series_land_in_registry():
+    st, r = _tiny("obs_tab", "lsm")
+    reg = default_registry()
+    per_shard = sum(c.value for c in reg.series("db_ingest_entries",
+                                                table="obs_tab"))
+    assert per_shard == 200               # every ingested entry attributed
+    st.query_rows(np.unique(r[:16]))
+    st.scan_range(0, 64)
+    hq = reg.series("db_op_latency_s", table="obs_tab", op="query")
+    hs = reg.series("db_op_latency_s", table="obs_tab", op="scan")
+    assert len(hq) == 1 and hq[0].count >= 1 and hq[0].min > 0
+    assert len(hs) == 1 and hs[0].count >= 1
+    assert sum(c.value for c in
+               reg.series("db_point_queries", table="obs_tab")) >= 1
+
+
+def test_dbserver_metrics_and_dump(tmp_path):
+    DB = dbsetup("obsdb", dict(num_shards=2, capacity_per_shard=4096,
+                               batch_cap=2048, id_capacity=1 << 16))
+    T = DB["mtab"]
+    T.put_triple(np.asarray(["a", "b", "c"], object),
+                 np.asarray(["x", "x", "y"], object),
+                 np.asarray([1.0, 2.0, 3.0]))
+    assert T["a,", :].nnz() == 1
+    m = DB.metrics()
+    assert m["instance"] == "obsdb"
+    tab = m["tables"]["mtab"]
+    assert set(tab["latency_s"]) == {"ingest", "query", "scan", "flush",
+                                     "major_compaction"}
+    assert tab["latency_s"]["ingest"]["count"] >= 1
+    assert tab["counters"]["fused_dispatches"] >= 0
+    assert set(tab["shards"]) == {"0", "1"}
+    shard_ing = sum(s["ingest_entries"] for s in tab["shards"].values())
+    assert shard_ing >= 3                 # transpose table is separate
+    agg = m["aggregate"]
+    assert agg["latency_s"]["ingest"]["count"] >= \
+        tab["latency_s"]["ingest"]["count"]
+    assert agg["counters"]["flushes"] >= 0
+    path = tmp_path / "metrics.json"
+    snap = DB.dump_metrics(str(path))
+    on_disk = json.loads(path.read_text())
+    assert on_disk["instance"] == "obsdb"
+    assert on_disk["tables"].keys() == snap["tables"].keys()
+
+
+# ------------------------------------------------------- disabled overhead
+def test_disabled_mode_overhead_budget():
+    """Acceptance bar: with the registry disabled, the instrumentation
+    left in the hot path must cost <2% of a point query. Measured as
+    (actual instrument touches for one query) x (measured per-op disabled
+    cost), against the measured query wall time."""
+    st, r = _tiny("ovh_tab", "lsm")
+    st.insert(r[:32], np.zeros(32, np.int32), np.ones(32, np.float32))
+    q = np.unique(r[:8])
+    st.query_rows(q)                      # warm the jit cache
+    reps = 15
+    times = []
+    for _ in range(reps):
+        t0 = perf_counter()
+        st.query_rows(q)
+        times.append(perf_counter() - t0)
+    query_wall = sorted(times)[reps // 2]
+
+    # count the instrument touches ONE query actually performs
+    reg, tr = default_registry(), default_tracer()
+    c0 = {id(i): i.value for i in reg.series() if i.kind == "counter"}
+    h0 = {id(i): i.count for i in reg.series() if i.kind == "histogram"}
+    tr.clear()
+    st.query_rows(q)
+    n_incs = sum(1 for i in reg.series()
+                 if i.kind == "counter" and i.value != c0.get(id(i), 0))
+    n_obs = sum(1 for i in reg.series()
+                if i.kind == "histogram" and i.count != h0.get(id(i), 0))
+    n_spans = len(tr.spans())
+    assert n_spans >= 2 and n_obs >= 1    # instrumentation is actually live
+
+    # per-op cost with everything disabled
+    priv = Registry(enabled=False)
+    ptr = Tracer(enabled=False)
+    c, h = priv.counter("x"), priv.histogram("y")
+    N = 20_000
+
+    def cost(fn):
+        best = math.inf
+        for _ in range(3):
+            t0 = perf_counter()
+            for _ in range(N):
+                fn()
+            best = min(best, (perf_counter() - t0) / N)
+        return best
+
+    inc_cost = cost(c.inc)
+    obs_cost = cost(lambda: h.observe(1e-3))
+    span_cost = cost(lambda: ptr.span("s"))
+    budget = (n_incs * inc_cost + n_obs * obs_cost
+              + (n_spans + 2) * span_cost)
+    assert budget < 0.02 * query_wall, (
+        f"disabled-mode budget {budget * 1e6:.2f}us exceeds 2% of "
+        f"query wall {query_wall * 1e6:.1f}us "
+        f"(incs={n_incs} obs={n_obs} spans={n_spans})")
+
+
+def test_set_enabled_kill_switch_round_trip():
+    reg = default_registry()
+    c = reg.counter("kill_switch_probe")
+    c.reset()
+    try:
+        set_enabled(False)
+        c.inc(7)
+        assert c.value == 0
+    finally:
+        set_enabled(True)
+    c.inc(7)
+    assert c.value == 7
