@@ -11,6 +11,10 @@ JSON, and compares each against the baselines committed at the repo root:
                              (min over scan rows with range_len >= 64)
   * ``lsm_vs_single``      — LSM ingest vs the single-run engine
                              (BENCH_ingest ``lsm_ingest_speedup``)
+  * ``query_lsm_vs_single`` — LSM tiled fused reads vs the single-run
+                             engine, WORST queries_per_s ratio across the
+                             query batch-size sweep (BENCH_ingest
+                             ``lsm_query_speedup``)
 
 A tracked ratio may drop at most ``--threshold`` (default 20%) below its
 committed baseline; any deeper drop exits nonzero. Ratios are used rather
@@ -60,6 +64,8 @@ def extract_ratios(ingest: Optional[dict],
     if ingest:
         if "lsm_ingest_speedup" in ingest:
             out["lsm_vs_single"] = float(ingest["lsm_ingest_speedup"])
+        if "lsm_query_speedup" in ingest:
+            out["query_lsm_vs_single"] = float(ingest["lsm_query_speedup"])
     return out
 
 

@@ -178,6 +178,15 @@ def engine_compare(entries_per_shard: int = 1 << 18, shards: int = 2,
     ratio the CI bench gate tracks stays stable even when absolute walls
     swing. Per-engine rates report the best wall (one-sided noise
     filter).
+
+    A final query-batch sweep (64..4096 ids) times the FIRST call at each
+    size — the one-shot serving semantics ``queries_per_s`` has always
+    used — for the LSM tiled fused path, its per-run baseline, AND the
+    legacy engine (steady-state rates ride along as advisory columns);
+    ``lsm_query_speedup`` — the WORST lsm/single ratio across the sweep —
+    is the large-batch read claim the CI gate tracks (pre-tiling, batches
+    past ``fused_q_limit`` fell back to one launch per resident run and
+    lost ~6x to the legacy engine even before its per-size retrace cost).
     """
     id_cap = 1 << 22
     total = entries_per_shard * shards
@@ -222,6 +231,7 @@ def engine_compare(entries_per_shard: int = 1 << 18, shards: int = 2,
 
     # ---- phase 2: flush-cost probe + query phase per engine
     reg = default_registry()
+    mem_pre_read = {}
     for engine in ("single", "lsm"):
         store = stores[engine]
         ingest_wall = min(walls[engine])
@@ -246,17 +256,16 @@ def engine_compare(entries_per_shard: int = 1 << 18, shards: int = 2,
             store.tablets.rows.block_until_ready()
         flush_wall = time.time() - t0
         # leave fresh writes in the memtable so the query path must merge
-        # memtable + runs (the no-flush read claim)
+        # memtable + runs (the no-flush read claim), then compile the
+        # engine's STATIC serving shapes off-clock: the LSM fused path has
+        # exactly two (point bucket + query tile) and the tile serves any
+        # batch size; the legacy engine has no size-independent shape to
+        # warm — its first read also absorbs the tail into the tablet
         store.insert(rows[:256], cols[:256], vals[:256])
-        store.query_rows(q[:16])  # query-path warmup
-        mem_before = store._mem_n.copy()
-        t0 = time.time()
-        qr, qc, qv = store.query_rows(q)
-        query_wall = time.time() - t0
-        flushed = bool((store._mem_n != mem_before).any())
+        store.warm_reads()
         # per-call query latency sampling: repeated SMALL batches (the
-        # tracked queries_per_s protocol above is one big batch and stays
-        # untouched) so p50/p99 reflect per-dispatch read latency
+        # tracked queries_per_s protocol lives in the sweep below and
+        # stays one-shot) so p50/p99 reflect per-dispatch read latency
         qb = 16
         store.query_rows(q[:qb])  # warm the small-batch jit off the clock
         store._h_query.reset()
@@ -264,24 +273,87 @@ def engine_compare(entries_per_shard: int = 1 << 18, shards: int = 2,
             j = (i * qb) % max(n_queries - qb, 1)
             store.query_rows(q[j:j + qb])
         lat_q = store._h_query.percentiles()
+        mem_pre_read[engine] = store._mem_n.copy()
         out["engines"][engine] = {
             "ingest_wall_s": ingest_wall,
             "entries_per_s": total / ingest_wall,
             "ingest_batch_p50_ms": h_ing.quantile(0.50) * 1e3,
             "ingest_batch_p99_ms": h_ing.quantile(0.99) * 1e3,
             "flush_at_full_table_s": flush_wall,
-            "query_wall_s": query_wall,
-            "queries_per_s": n_queries / query_wall,
             "query_p50_ms": lat_q["p50"] * 1e3,
             "query_p99_ms": lat_q["p99"] * 1e3,
-            "query_hits": int(len(qr)),
-            "flushed_on_read": flushed,
-            "stats": store.engine_stats(),
         }
         print(f"engine={engine:6s} ingest={total / ingest_wall:>12,.0f} e/s "
-              f"queries={n_queries / query_wall:>10,.0f} q/s "
-              f"full-table flush={flush_wall * 1e3:>8.1f} ms "
-              f"flushed_on_read={flushed}")
+              f"full-table flush={flush_wall * 1e3:>8.1f} ms")
+    # ---- phase 3: query batch-size sweep — the tiled fused read claim.
+    # Protocol: FIRST-CALL wall per batch size, the same one-shot
+    # semantics the tracked ``queries_per_s`` has always had ("a fresh
+    # batch size arrives at the serving process"). Each engine pays what
+    # its architecture charges on that first call: the legacy engine's
+    # query shape follows the batch, so every novel size retraces; the
+    # per-run baseline additionally launches once per resident run; the
+    # tiled fused path serves ANY size from the one tile shape
+    # ``warm_reads()`` precompiled. Steady-state rates (best of 3 warm
+    # repeats) ride along as advisory columns: on this multi-run mixed
+    # state the single tablet's warm read stays ahead at large batches
+    # (classic LSM read amplification) — the gated claim is the serving
+    # trajectory, where shape-churn dominates, and the regression this
+    # metric guards is the old per-run fallback losing ~6x even there.
+    def timed(store, qq, reps=3):
+        t0 = time.time()
+        res = store.query_rows(qq)
+        first = time.time() - t0
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.time()
+            store.query_rows(qq)
+            best = min(best, time.time() - t0)
+        return first, best, res
+
+    sweep = []
+    q_pool = rng.choice(rows, max(4096, n_queries)).astype(np.int32)
+    lsm_store = stores["lsm"]
+    for size in sorted({64, 256, 1024, 2048, 4096} | {n_queries}):
+        qq = q_pool[:size]
+        s_first, s_steady, s_res = timed(stores["single"], qq)
+        lsm_store.fused_reads = True
+        f_first, f_steady, f_res = timed(lsm_store, qq)
+        lsm_store.fused_reads = False
+        p_first, p_steady, _ = timed(lsm_store, qq)
+        lsm_store.fused_reads = True
+        sweep.append({"batch": size,
+                      "single_qps": size / s_first,
+                      "lsm_qps": size / f_first,
+                      "lsm_perrun_qps": size / p_first,
+                      "lsm_vs_single": s_first / f_first,
+                      "fused_vs_perrun": p_first / f_first,
+                      "single_steady_qps": size / s_steady,
+                      "lsm_steady_qps": size / f_steady,
+                      "lsm_perrun_steady_qps": size / p_steady,
+                      "lsm_vs_single_steady": s_steady / f_steady})
+        if size == n_queries:
+            for eng, first, res in (("single", s_first, s_res),
+                                    ("lsm", f_first, f_res)):
+                out["engines"][eng].update(
+                    query_wall_s=first, queries_per_s=size / first,
+                    query_hits=int(len(res[0])))
+        print(f"query batch={size:5d} single={size / s_first:>10,.0f} q/s "
+              f"lsm={size / f_first:>10,.0f} q/s "
+              f"perrun={size / p_first:>10,.0f} q/s "
+              f"lsm/single={s_first / f_first:.2f}x "
+              f"fused/perrun={p_first / f_first:.2f}x "
+              f"(steady lsm/single={s_steady / f_steady:.2f}x)")
+    # serving reads must merge the memtable tail on-device, never flush
+    # (the single engine absorbed its tail at warm_reads, off-clock)
+    for engine in ("single", "lsm"):
+        out["engines"][engine]["flushed_on_read"] = bool(
+            (stores[engine]._mem_n != mem_pre_read[engine]).any())
+        out["engines"][engine]["stats"] = stores[engine].engine_stats()
+    out["query_sweep"] = sweep
+    # worst-case first-call ratio across the sweep: the gate metric — LSM
+    # reads must beat the legacy engine at EVERY batch size it serves
+    out["lsm_query_speedup"] = min(r["lsm_vs_single"] for r in sweep)
+
     # median of the per-repeat interleaved ratios (== best-wall ratio
     # when repeats == 1): the trajectory metric the CI bench gate tracks
     out["lsm_ingest_speedup"] = ratios[len(ratios) // 2]

@@ -125,7 +125,9 @@ class DBserver:
                  # mode on CPU is validation-only; XLA path is the CPU path)
                  engine: str = "lsm",  # storage engine: "lsm" (leveled
                  # runs, db/lsm) or "single" (legacy one-run tablet)
-                 fused_reads: bool = True,  # LSM point reads in one dispatch
+                 fused_reads: bool = True,  # LSM point reads fused-dispatch
+                 fused_q_limit: int = 512,  # query tile: larger batches
+                 # split into fused_q_limit-wide tiles (one jit entry each)
                  l0_slots: int = 4,   # LSM L0 runs per shard before a
                  fanout: int = 4,     # major compaction; level growth rate
                  wal_root: str = None):  # durability root: each table logs
@@ -141,6 +143,7 @@ class DBserver:
         self.use_pallas = use_pallas
         self.engine = engine
         self.fused_reads = fused_reads
+        self.fused_q_limit = fused_q_limit
         self.l0_slots = l0_slots
         self.fanout = fanout
         self.keydict = StringDict()          # shared row/col key universe
@@ -393,6 +396,7 @@ class Table:
             combiner=combiner, use_pallas=server.use_pallas,
             engine=getattr(server, "engine", "lsm"),
             fused_reads=getattr(server, "fused_reads", True),
+            fused_q_limit=getattr(server, "fused_q_limit", 512),
             l0_slots=getattr(server, "l0_slots", 4),
             fanout=getattr(server, "fanout", 4),
             wal_dir=wal_dir)

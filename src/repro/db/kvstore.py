@@ -260,10 +260,12 @@ class ShardedTable:
         self.id_capacity = id_capacity
         self.combiner = combiner
         self.use_pallas = use_pallas
-        # fused_reads: serve LSM point queries via the single-dispatch
-        # fused path (db.lsm.engine.query_shard_fused); batches larger
-        # than fused_q_limit fall back to the per-run path, whose cost is
-        # bandwidth- not dispatch-bound at that size.
+        # fused_reads: serve LSM point queries via the fused path
+        # (db.lsm.engine.query_shard_fused); fused_q_limit is the QUERY
+        # TILE — batches beyond the tiny point bucket pad UP to it and
+        # larger ones split into fixed-size tiles (one jit cache entry
+        # serves every batch size, block bloom-gated per run), never the
+        # per-run fallback. fused_reads=False keeps the per-run baseline.
         self.fused_reads = fused_reads
         self.fused_q_limit = fused_q_limit
         self.mem_cap = memtable_cap or max(batch_cap * 4,
@@ -404,6 +406,26 @@ class ShardedTable:
         else:
             jax.block_until_ready(self._insert(
                 self.tablets, self._mem_r, self._mem_c, self._mem_v))
+
+    def warm_reads(self) -> None:
+        """Precompile the read path's static serving shapes against the
+        CURRENT resident state (runs/levels/memtable geometry is baked
+        into the fused query graph, so this must run at serving time, not
+        ingest time). The LSM fused path has exactly two shapes — the
+        point bucket and the ``fused_q_limit`` query tile — and the tile
+        serves EVERY batch size, so one warm call here means no novel
+        batch size ever retraces. The legacy engine has no
+        batch-size-independent query shape to warm (its shape follows the
+        batch; a fresh size always recompiles) — for it this warms only a
+        nominal point batch. That asymmetry is the tiled-read claim.
+        Queries probe spread-out absent ids: every shard dispatches, and
+        ``lax.cond`` bloom gates compile both branches at trace time."""
+        self._check_open()
+        self.query_rows(np.zeros(1, np.int32))  # point bucket
+        if self.engine == "lsm" and self.fused_reads:
+            probe = np.linspace(0, self.id_capacity - 1,
+                                2 * self.S * 8 + 2).astype(np.int32)
+            self.query_rows(np.unique(probe))   # > 8 ids/shard: the tile
 
     def engine_stats(self) -> dict:
         """Observability: flush/compaction counts and bloom skip rates.
@@ -613,7 +635,7 @@ class ShardedTable:
                 uq, ucnt = np.unique(q, return_counts=True)
                 mem_n = int(self._mem_n[s])
                 mh = self._mem_host(int(s))
-                if self.fused_reads and len(uq) <= self.fused_q_limit:
+                if self.fused_reads:
                     mem_sorted = False
                     if mem_n == 0:
                         fmem = None
@@ -625,10 +647,13 @@ class ShardedTable:
                                 self._mem_c[s, :mem_n],
                                 self._mem_v[s, :mem_n])
                     if fmem is None and not self._runs.resident_runs(int(s)):
-                        continue  # empty shard: nothing to dispatch
+                        # empty shard: nothing to dispatch — still observed
+                        self._h_shard_query[int(s)].observe(
+                            perf_counter() - t_sh)
+                        continue
                     r, c, v = self._runs.query_shard_fused(
                         int(s), uq, mem_host=fmem, max_return=max_return,
-                        mem_sorted=mem_sorted)
+                        mem_sorted=mem_sorted, q_tile=self.fused_q_limit)
                 else:
                     if mh is None and mem_n:  # stale: pull device bufs
                         mem = (self._mem_r[s], self._mem_c[s],

@@ -22,17 +22,18 @@ Two read paths serve point queries (neither ever flushes):
 
 * **fused** (default, ``query_shard_fused``): the entire shard — every
   leveled run, the whole L0 stack, and the memtable tail — is searched by
-  ONE jitted dispatch. Runs keep their static stacked shapes (levels are
-  distinct-capacity buckets, L0 is already a [K0, m] batch; empty slots
-  are inert I32_MAX padding, so no re-bucketing is ever needed), the
-  bloom-gated fence-bracketed rank search is vmapped across runs, and the
-  cross-run age-ordered combine happens on-device: one dispatch, one host
-  sync, regardless of how many runs are resident.
+  ONE jitted dispatch per query TILE. Runs keep their static stacked
+  shapes (levels are distinct-capacity buckets, L0 is already a [K0, m]
+  batch; empty slots are inert I32_MAX padding, so no re-bucketing is
+  ever needed), each run's fence-bracketed rank search is block
+  bloom-gated (``lax.cond`` — a tile that misses a run's filter skips its
+  probe entirely), and the cross-run age-ordered combine happens
+  on-device via the batched ``merge_rank`` rank+scatter merge. Batches
+  larger than the tile split into fixed-size blocks that reuse ONE jit
+  cache entry: ceil(Q/tile) dispatches, never a per-run fallback.
 * **per-run** (``query_shard``): one bloom-gated kernel launch per
-  resident run, combined on the host. Kept as the A/B baseline and used
-  for very large query batches, where the fused on-device combine's
-  [Q, runs*max_return] sort would dominate (reads there are
-  bandwidth-bound, not dispatch-bound).
+  resident run, combined on the host. Kept as the A/B baseline
+  (``fused_reads=False``) and for the stale-mirror recovery corners.
 
 All state is stacked [S, ...] across shards; flushes and compactions are
 vmapped so the S simulated tablet servers advance in lockstep (one hot
@@ -50,7 +51,7 @@ import numpy as np
 
 from ...kernels.common import I32_MAX, INTERPRET
 from ...obs import default_registry, default_tracer
-from ...kernels.merge_rank import kway_merge
+from ...kernels.merge_rank import kway_merge, merge_combine_rows
 from ...kernels.sorted_search import (sorted_search_batched,
                                       sorted_search_endpoints)
 from .bloom import (BITS_PER_KEY, MAX_HASHES, NUM_HASHES, bloom_build,
@@ -304,12 +305,22 @@ def _fused_query_fn(combiner: str, level_blocks: Tuple[int, ...],
     between inserts); ``"raw"`` = unsorted device slices, sort in-dispatch
     (the stale-mirror SPMD path); ``"none"`` = empty.
 
-    The on-device combine sorts each query's candidates by (col, age) and
-    reduces equal-col groups with the combiner — exactly
+    The on-device combine orders each query's candidates by (col, age)
+    and reduces equal-col groups with the combiner — exactly
     ``combine_triples`` semantics, no host work. Under ``pack`` the
     (col, age) key pair packs into ONE int32 (valid when
-    id_capacity * age_padding < 2**30), hitting XLA:CPU's fast single-key
-    sort instead of the ~10x slower multi-operand comparator sort.
+    id_capacity * age_padding < 2**30) and the packed keys — unique per
+    query row — are merged by the batched ``merge_rank`` rank+scatter
+    merge (``merge_combine_rows``: strict self-rank IS the merged
+    position; Pallas ``row_rank`` kernel under ``use_pallas``) as long as
+    the candidate width stays within its quadratic-compare budget; wider
+    retries and unpackable geometry fall back to ``lax.sort``.
+
+    Every run's probe is BLOCK bloom-gated: the whole query block's hit
+    mask feeds a ``lax.cond``, so a block that misses a run's filter
+    entirely skips that run's fence search and window gathers — with
+    query tiling, a tile whose key range lands outside a run costs only
+    the bloom probes.
 
     Returns (cols[Q, W], vals[Q, W], keep[Q, W], cnt_max, hits[L+K0])
     with W = n_runs * max_return; ``cnt_max`` > max_return signals the
@@ -324,35 +335,55 @@ def _fused_query_fn(combiner: str, level_blocks: Tuple[int, ...],
         seg_cols, seg_vals, seg_ok, seg_age, cnts, hits = [], [], [], [], [], []
         n_q = q.shape[0]
         iota = jnp.arange(max_return, dtype=jnp.int32)
+
+        def skip(_):
+            return (jnp.zeros((n_q, max_return), jnp.int32),
+                    jnp.zeros((n_q, max_return), jnp.float32),
+                    jnp.zeros((n_q, max_return), jnp.bool_),
+                    jnp.zeros((n_q,), jnp.int32))
+
         # leveled runs, deepest (oldest) first — ages 1..L
         for i, (rows, cols, vals, fence, bloom) in enumerate(levels):
             hit = bloom_maybe_contains(bloom, q, level_hashes[i])
-            c_o, v_o, ok, cnt = _probe_stack(
-                rows[None], cols[None], vals[None], fence[None], q,
-                max_return, level_blocks[i], use_pallas)
-            seg_cols.append(c_o[0])
-            seg_vals.append(v_o[0])
-            seg_ok.append(ok[0] & hit[:, None])
+            any_hit = jnp.any(hit)
+
+            def probe(_, rows=rows, cols=cols, vals=vals, fence=fence,
+                      blk=level_blocks[i]):
+                c_o, v_o, ok, cnt = _probe_stack(
+                    rows[None], cols[None], vals[None], fence[None], q,
+                    max_return, blk, use_pallas)
+                return c_o[0], v_o[0], ok[0], cnt[0]
+
+            c_o, v_o, ok, cnt = jax.lax.cond(any_hit, probe, skip, None)
+            seg_cols.append(c_o)
+            seg_vals.append(v_o)
+            seg_ok.append(ok & hit[:, None])
             seg_age.append(i + 1)
-            cnts.append(cnt[0])
-            hits.append(jnp.any(hit))
+            cnts.append(cnt)
+            hits.append(any_hit)
         # the used L0 slots — ages L+1..L+K0 (a slot empty for THIS shard
-        # while used by a peer is inert I32_MAX padding)
+        # while used by a peer is inert I32_MAX padding); gated per slot,
+        # same cond pattern
         l0_rows, l0_cols, l0_vals, l0_fence, l0_bloom = l0
         k0 = l0_rows.shape[0]
         if k0:
             l0_hit = bloom_maybe_contains_batch(l0_bloom, q, h0)  # [K0, Q]
-            c_o, v_o, ok, cnt = _probe_stack(l0_rows, l0_cols, l0_vals,
-                                             l0_fence, q, max_return, b0,
-                                             use_pallas)
-            ok = ok & l0_hit[:, :, None]
             for k in range(k0):
-                seg_cols.append(c_o[k])
-                seg_vals.append(v_o[k])
-                seg_ok.append(ok[k])
+                any_k = jnp.any(l0_hit[k])
+
+                def probe_k(_, k=k):
+                    c_o, v_o, ok, cnt = _probe_stack(
+                        l0_rows[k][None], l0_cols[k][None], l0_vals[k][None],
+                        l0_fence[k][None], q, max_return, b0, use_pallas)
+                    return c_o[0], v_o[0], ok[0], cnt[0]
+
+                c_o, v_o, ok, cnt = jax.lax.cond(any_k, probe_k, skip, None)
+                seg_cols.append(c_o)
+                seg_vals.append(v_o)
+                seg_ok.append(ok & l0_hit[k][:, None])
                 seg_age.append(n_levels + 1 + k)
-                cnts.append(cnt[k])
-                hits.append(jnp.any(l0_hit[k]))
+                cnts.append(cnt)
+                hits.append(any_k)
         # the memtable tail (newest): one pre-combined sorted pseudo-run
         # (intra-memtable combine commutes with the cross-run combine —
         # flush relies on the same property)
@@ -380,8 +411,20 @@ def _fused_query_fn(combiner: str, level_blocks: Tuple[int, ...],
         if pack:
             shift = (len(seg_age) + 1).bit_length()  # ages fit below shift
             key = jnp.where(ok_all, (cols_all << shift) + ages, I32_MAX)
-            key_s, val_s = jax.lax.sort((key, vals_all), dimension=1,
-                                        num_keys=1)
+            if cols_all.shape[1] <= 256:
+                # packed keys are UNIQUE per row (cols unique within a run
+                # segment, ages distinguish runs) — the merge_rank
+                # rank+scatter combine beats XLA:CPU's scalar comparator
+                # sort at these widths (N^2 branch-free compares, SIMD).
+                key_s, val_s = merge_combine_rows(key, vals_all,
+                                                  use_pallas=use_pallas,
+                                                  interpret=INTERPRET)
+            else:
+                # widen retries can blow the candidate width up; the
+                # quadratic compare loses to N log N there — fall back to
+                # the packed single-key sort.
+                key_s, val_s = jax.lax.sort((key, vals_all), dimension=1,
+                                            num_keys=1)
             col_s = jnp.where(key_s == I32_MAX, I32_MAX, key_s >> shift)
         else:
             col_m = jnp.where(ok_all, cols_all, I32_MAX)
@@ -593,8 +636,8 @@ def _prep_mem(mem_host: Optional[Tuple], mem_sorted: bool):
 # counter schema shared by BOTH engines ("single" reports zeros where an
 # op doesn't apply) so A/B stats line up in BENCH_ingest.json
 STAT_KEYS = ("flushes", "major_compactions", "runs_probed", "runs_skipped",
-             "fused_dispatches", "fused_widen_retries", "scan_dispatches",
-             "scan_widen_retries")
+             "fused_dispatches", "fused_widen_retries", "fused_tiles",
+             "perrun_dispatches", "scan_dispatches", "scan_widen_retries")
 
 
 # ------------------------------------------------------------------ engine
@@ -919,61 +962,92 @@ class LSMRuns:
     def query_shard_fused(self, s: int, q: np.ndarray,
                           mem_host: Optional[Tuple] = None,
                           max_return: int = 256,
-                          mem_sorted: bool = False):
-        """Point row queries for one shard in ONE jitted dispatch + ONE
-        host sync: the resident leveled runs, the used L0 slots, and the
-        memtable tail are searched and age-order combined on-device. ``q``
-        must be sorted unique int32 (the ``ShardedTable`` driver
-        guarantees it); ``mem_host`` is the shard's unflushed tail as
-        (rows, cols, vals) arrays — numpy (host mirror; pass
-        ``mem_sorted=True`` if already (row, col)-sorted and
-        combiner-deduped) or device slices (stale-mirror SPMD path).
-        NO flush happens."""
+                          mem_sorted: bool = False,
+                          q_tile: Optional[int] = None):
+        """Point row queries for one shard, fused: each dispatch searches
+        the resident leveled runs, the used L0 slots, and the memtable
+        tail and age-order combines on-device. ``q`` must be sorted unique
+        int32 (the ``ShardedTable`` driver guarantees it); ``mem_host`` is
+        the shard's unflushed tail as (rows, cols, vals) arrays — numpy
+        (host mirror; pass ``mem_sorted=True`` if already
+        (row, col)-sorted and combiner-deduped) or device slices
+        (stale-mirror SPMD path). NO flush happens.
+
+        When ``q_tile`` is set the read path serves every batch size from
+        exactly TWO static shapes: tiny point reads (n_q <= 8) use the
+        small bucket, and everything else pads UP to the ``q_tile`` tile —
+        batches larger than the tile split into ceil(n_q / tile)
+        dispatches of that one shape, each independently widen-retryable.
+        One jit cache entry therefore covers every large batch size the
+        caller ever sends (a fresh size never retraces — the legacy
+        engine, whose query shape follows the batch, recompiles per novel
+        size). Each run's probe is block bloom-gated inside the dispatch,
+        so a tile whose keys all miss a run's filter skips that run's
+        search entirely. Tiles are contiguous slices of the sorted ``q``,
+        so concatenating per-tile results preserves global row order.
+        ``q_tile=None`` keeps the legacy bucket-by-batch-size shapes."""
         n_q = len(q)
-        q_pad = np.full(_bucket(n_q), -1, np.int32)  # -1: matches nothing
-        q_pad[:n_q] = q
         mem, mem_mode = _prep_mem(mem_host, mem_sorted)
         levels, blocks, hashes, live, l0 = self._fused_views(s)
         n_runs = len(levels) + int(l0[0].shape[0]) + (mem_mode != "none")
         # single-int32 (col, age) key packing needs col * age_pad headroom
         pack = self.id_capacity <= (1 << 24) and n_runs + 2 < 64
         # small initial per-run return width: the combine cost scales with
-        # runs * width, and point reads rarely exceed a few entries per
-        # run — cnt_max triggers the widen retry when they do
-        r_ret = min(16, _bucket(max_return))
+        # Qtile * (runs * width)^2, and point reads rarely exceed a few
+        # entries per run — cnt_max triggers the widen retry when they do
+        r_ret = min(4, _bucket(max_return))
+        tile = (_bucket(n_q) if q_tile is None or n_q <= 8
+                else _bucket(q_tile))
+        n_tiles = max(1, -(-n_q // tile))
+        if n_tiles > 1:
+            self._ctr["fused_tiles"].inc(n_tiles)
         fn = _fused_query_fn(self.combiner, blocks, hashes, self._b0,
                              self._h0, r_ret, mem_mode, pack,
                              self.use_pallas)
         tr = self._trace
-        self._ctr["fused_dispatches"].inc()
-        with tr.span("query.fused", table=self.name, shard=s, n_q=n_q):
-            with tr.span("dispatch"):
-                out = fn(q_pad, levels, l0, mem)
-            with tr.span("host_sync"):
-                cols_s, vals_s, keep, cnt_max, hits = \
-                    tuple(np.asarray(x) for x in out)
-            if int(cnt_max) > r_ret:  # widen + retry (scanner semantics)
-                self._ctr["fused_widen_retries"].inc()
+        out_r, out_c, out_v = [], [], []
+        hit_any = None
+        with tr.span("query.fused", table=self.name, shard=s, n_q=n_q,
+                     tiles=n_tiles):
+            for t in range(n_tiles):
+                q_blk = q[t * tile:(t + 1) * tile]
+                nb = len(q_blk)
+                q_pad = np.full(tile, -1, np.int32)  # -1: matches nothing
+                q_pad[:nb] = q_blk
                 self._ctr["fused_dispatches"].inc()
-                with tr.span("widen_retry", width=int(cnt_max)):
-                    fn = _fused_query_fn(self.combiner, blocks, hashes,
-                                         self._b0, self._h0,
-                                         _bucket(int(cnt_max)), mem_mode,
-                                         pack, self.use_pallas)
+                with tr.span("dispatch", tile=t):
                     out = fn(q_pad, levels, l0, mem)
+                with tr.span("host_sync"):
                     cols_s, vals_s, keep, cnt_max, hits = \
                         tuple(np.asarray(x) for x in out)
-        # observability: hits = [resident levels deepest-first, used slots]
+                if int(cnt_max) > r_ret:  # widen + retry (scanner)
+                    self._ctr["fused_widen_retries"].inc()
+                    self._ctr["fused_dispatches"].inc()
+                    with tr.span("widen_retry", width=int(cnt_max)):
+                        wfn = _fused_query_fn(self.combiner, blocks,
+                                              hashes, self._b0, self._h0,
+                                              _bucket(int(cnt_max)),
+                                              mem_mode, pack,
+                                              self.use_pallas)
+                        out = wfn(q_pad, levels, l0, mem)
+                        cols_s, vals_s, keep, cnt_max, hits = \
+                            tuple(np.asarray(x) for x in out)
+                qi, ki = np.nonzero(keep[:nb])
+                out_r.append(q_blk[qi])
+                out_c.append(cols_s[:nb][qi, ki])
+                out_v.append(vals_s[:nb][qi, ki])
+                hit_any = hits if hit_any is None else (hit_any | hits)
+        # observability: a run counts as probed if ANY tile's query block
+        # hit its bloom; hits = [resident levels deepest-first, used slots]
         probed, skipped = self._ctr["runs_probed"], self._ctr["runs_skipped"]
         for i in range(len(live)):
-            (probed if hits[i] else skipped).inc()
+            (probed if hit_any[i] else skipped).inc()
         for k in range(int(self.l0_used[s])):
             if self.l0_n[s, k]:
-                (probed if hits[len(live) + k] else skipped).inc()
-        keep = keep[:n_q]
-        qi, ki = np.nonzero(keep)
-        return (q[qi].astype(np.int32), cols_s[:n_q][qi, ki],
-                vals_s[:n_q][qi, ki])
+                (probed if hit_any[len(live) + k] else skipped).inc()
+        return (np.concatenate(out_r).astype(np.int32),
+                np.concatenate(out_c).astype(np.int32),
+                np.concatenate(out_v).astype(np.float32))
 
     def scan_shard_fused(self, s: int, lo: int, hi: int,
                          mem_host: Optional[Tuple] = None,
@@ -1060,6 +1134,7 @@ class LSMRuns:
             if q_sorted[-1] < minr or q_sorted[0] > maxr:
                 self._ctr["runs_skipped"].inc()
                 continue
+            self._ctr["perrun_dispatches"].inc()
             out = run_query_gated(rows, cols, vals, fence, bloom, q_dev,
                                   max_return, block, hashes)
             launched.append((age, (rows, cols, vals, fence, block), out))
@@ -1072,6 +1147,7 @@ class LSMRuns:
             cnt = np.asarray(cnt)
             if cnt.max(initial=0) > max_return:  # widen + retry (scanner)
                 rows, cols, vals, fence, block = run
+                self._ctr["perrun_dispatches"].inc()
                 cols_o, vals_o, ok, cnt = run_query_rows(
                     rows, cols, vals, fence, q_dev, int(cnt.max()), block)
             ok = np.asarray(ok)

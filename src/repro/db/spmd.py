@@ -187,7 +187,7 @@ def make_spmd_lsm_ingest_step(mesh, axis: str, num_shards: int,
 
 
 def make_spmd_lsm_query_step(mesh, axis: str, combiner: str = "last",
-                             max_return: int = 64):
+                             max_return: int = 64, q_tile: int = None):
     """Fused point reads on the mesh: ONE shard_map'd jit searches each
     shard's level run plus its ENTIRE L0 stack and combines the candidates
     on-device — the distributed analogue of the local engine's
@@ -200,6 +200,12 @@ def make_spmd_lsm_query_step(mesh, axis: str, combiner: str = "last",
     (cols[S, Qb, W], vals[S, Qb, W], keep[S, Qb, W]) with
     W = (slots + 1) * max_return: per query, kept entries are its combined
     (col, val) results, cols ascending.
+
+    ``q_tile`` mirrors the local engine's query tiling: batches wider than
+    it are split along the query axis into ``q_tile``-wide blocks (the
+    last padded with -1), each served by the SAME compiled step (one jit
+    cache entry regardless of batch width) and the per-tile outputs
+    concatenated back to ``Qb``. ``None`` keeps one dispatch per batch.
     """
     from .kvstore import _dedup_combine
 
@@ -249,7 +255,29 @@ def make_spmd_lsm_query_step(mesh, axis: str, combiner: str = "last",
                               P(axis, None)),
                     out_specs=(P(axis, None, None), P(axis, None, None),
                                P(axis, None, None)), **_SHARD_MAP_KW)
-    return _instrumented(jax.jit(fn), "spmd_lsm_query")
+    base = jax.jit(fn)
+    if q_tile is None:
+        return _instrumented(base, "spmd_lsm_query")
+
+    def tiled(l0, level, q):
+        n_q = q.shape[1]
+        if n_q <= q_tile:
+            return base(l0, level, q)
+        outs = []
+        for t in range(0, n_q, q_tile):
+            q_blk = q[:, t:t + q_tile]
+            pad = q_tile - q_blk.shape[1]
+            if pad:
+                q_blk = jnp.pad(q_blk, ((0, 0), (0, pad)),
+                                constant_values=-1)
+            outs.append(base(l0, level, q_blk))
+        cols = jnp.concatenate([o[0] for o in outs], axis=1)[:, :n_q]
+        vals = jnp.concatenate([o[1] for o in outs], axis=1)[:, :n_q]
+        keep = jnp.concatenate([o[2] for o in outs], axis=1)[:, :n_q]
+        return cols, vals, keep
+
+    tiled.__wrapped__ = base
+    return _instrumented(tiled, "spmd_lsm_query")
 
 
 def make_spmd_lsm_scan_step(mesh, axis: str, combiner: str = "last",

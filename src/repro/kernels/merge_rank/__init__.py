@@ -1,4 +1,5 @@
-from .ops import kway_merge, merge_sorted
-from .ref import merge_sorted_ref
+from .ops import kway_merge, merge_combine_rows, merge_sorted
+from .ref import merge_combine_rows_ref, merge_sorted_ref, row_rank_ref
 
-__all__ = ["kway_merge", "merge_sorted", "merge_sorted_ref"]
+__all__ = ["kway_merge", "merge_combine_rows", "merge_combine_rows_ref",
+           "merge_sorted", "merge_sorted_ref", "row_rank_ref"]

@@ -49,3 +49,44 @@ def pair_rank_pallas(tr, tc, qr, qc, *, strict: bool,
         out_shape=jax.ShapeDtypeStruct((n_q, 1), jnp.int32),
         interpret=interpret,
     )(qr, qc, tr, tc)
+
+
+def _row_rank_kernel(q_ref, t_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[...]                          # (bq, W) — full row of keys
+    t = t_ref[...]                          # (bq, bt) — one target tile
+    less = t[:, None, :] < q[:, :, None]    # (bq, W, bt) branch-free
+    o_ref[...] += jnp.sum(less.astype(jnp.int32), axis=2)
+
+
+def row_rank_pallas(keys, *, block_q: int = 8, block_t: int = 128,
+                    interpret: bool = True):
+    """Per-ROW self-rank: ``o[i, j] = |{ k : keys[i, k] < keys[i, j] }|``.
+
+    The batched (query-axis) variant of ``pair_rank_pallas``: when each
+    row holds the concatenation of K sorted segments whose valid keys are
+    globally UNIQUE (pads = I32_MAX), the strict self-rank of an element
+    IS its position in the K-way merged row — a rank+scatter merge of all
+    K segments in one pass instead of a pairwise reduction tree. Pads all
+    rank at n_valid (harmless scatter collisions, pad over pad).
+
+    Shapes: keys [Q, W] with Q % block_q == 0 and W % block_t == 0
+    (callers pad with I32_MAX — pad targets are never < any key, pad
+    query rows rank to zeros; both slice away cleanly).
+    """
+    n_q, n_w = keys.shape
+    grid = (n_q // block_q, n_w // block_t)
+    return pl.pallas_call(
+        _row_rank_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_q, n_w), lambda i, j: (i, 0)),
+                  pl.BlockSpec((block_q, block_t), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_q, n_w), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_q, n_w), jnp.int32),
+        interpret=interpret,
+    )(keys, keys)

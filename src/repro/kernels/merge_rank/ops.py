@@ -1,4 +1,4 @@
-"""jit'd wrapper: merge two sorted (row, col, val) runs by rank + scatter.
+"""jit'd wrapper: merge sorted runs by rank + scatter (1-D) / one-hot (2-D).
 
 Invalid entries in either run must carry key (I32_MAX, I32_MAX); they sort
 to the tail of the merged output naturally, so fixed-capacity tablets merge
@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from ..common import INTERPRET, I32_MAX, pad_to
-from .kernel import pair_rank_pallas
+from .kernel import pair_rank_pallas, row_rank_pallas
 
 
 @functools.partial(jax.jit, static_argnames=("block_q", "block_t", "interpret"))
@@ -89,3 +89,52 @@ def kway_merge(runs, use_pallas: bool = True, interpret: bool = INTERPRET):
 def _merge_ref(ar, ac, av, br, bc, bv):
     from .ref import merge_sorted_ref
     return merge_sorted_ref(ar, ac, av, br, bc, bv)
+
+
+def merge_combine_rows(keys, vals, use_pallas: bool = False,
+                       block_q: int = 8, block_t: int = 128,
+                       interpret: bool = INTERPRET):
+    """Row-wise K-way merge-combine by rank + scatter (traced inline —
+    callers jit). The batched read-path variant of ``merge_sorted``:
+
+    ``keys`` int32 [Q, N] — each row is the CONCATENATION of K sorted
+    candidate segments (one per run, (col, age)-packed by the fused query
+    so valid keys are globally unique per row); pads carry I32_MAX.
+    ``vals`` [Q, N] rides along. Returns (keys, vals) with every row in
+    ascending key order, pads at the tail.
+
+    Because valid keys are unique per row, an element's strict self-rank
+    against its whole row IS its merged position — the K-way
+    generalization of ``merge_sorted``'s rank-in-the-other-run scheme,
+    collapsed to a single rank pass (no pairwise reduction tree). The
+    permutation is applied as a ONE-HOT contraction rather than a
+    scatter: XLA:CPU lowers 2-D scatters to a slow serialized loop
+    (~1 ms for a [512, 20] tile) while the rank == position one-hot
+    einsum vectorizes (~3.5x faster, same asymptotics as the rank pass
+    itself). Pads all rank at n_valid and are masked out of the one-hot,
+    so unfilled output slots take I32_MAX (keys) / 0 (vals). Cost is N^2
+    branch-free compares per row vs the sort's N log N comparator ops —
+    a win for the small candidate widths the fused read path produces
+    (XLA:CPU comparator sorts are scalar and branchy; the compare tensor
+    vectorizes).
+    """
+    n_q, n_w = keys.shape
+    if use_pallas:
+        qp, wp = -n_q % block_q, -n_w % block_t
+        kp = jnp.pad(keys, ((0, qp), (0, wp)), constant_values=I32_MAX)
+        rank = row_rank_pallas(kp, block_q=block_q, block_t=block_t,
+                               interpret=interpret)[:n_q, :n_w]
+    else:
+        from .ref import row_rank_ref
+        rank = row_rank_ref(keys)
+    valid = keys != I32_MAX
+    iota = jnp.arange(n_w, dtype=jnp.int32)
+    onehot = ((rank[:, :, None] == iota[None, None, :])
+              & valid[:, :, None])                       # [Q, src, dst]
+    ohi = onehot.astype(jnp.int32)
+    filled = jnp.sum(ohi, axis=1)                        # [Q, dst] in {0,1}
+    out_k = (jnp.einsum("qj,qjp->qp", jnp.where(valid, keys, 0), ohi)
+             + (1 - filled) * I32_MAX)
+    out_v = jnp.einsum("qj,qjp->qp", jnp.where(valid, vals, 0),
+                       onehot.astype(vals.dtype))
+    return out_k, out_v

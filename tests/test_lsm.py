@@ -392,6 +392,18 @@ badq = [k for k in want_q if abs(got_q[k] - want_q[k]) > 1e-2]
 assert not badq, badq[:5]
 print("LSM-SPMD-QUERY-OK", len(got_q))
 
+# query tiling: q_tile=8 splits the QB=16 batch into 2 tiles served by the
+# same compiled step; outputs must match the untiled dispatch exactly
+query_tiled = make_spmd_lsm_query_step(mesh, "data", combiner="sum",
+                                       max_return=64, q_tile=8)
+tc, tv, tk = query_tiled(l0, level, jax.device_put(jnp.asarray(qhost), shq))
+np.testing.assert_array_equal(np.asarray(tk), qk)
+np.testing.assert_array_equal(np.where(qk, np.asarray(tc), 0),
+                              np.where(qk, qc, 0))
+np.testing.assert_allclose(np.where(qk, np.asarray(tv), 0.0),
+                           np.where(qk, qv, 0.0), rtol=1e-5, atol=1e-6)
+print("LSM-SPMD-QUERY-TILED-OK")
+
 # fused range scan (also BEFORE the final compact, so it must merge the
 # level run + L0 stack on-device): a global [lo, hi) split into per-shard
 # bounds; shards outside the range pass an empty interval
@@ -438,5 +450,6 @@ def test_spmd_lsm_ingest_and_compact():
                          cwd=".", capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-3000:]
     assert "LSM-SPMD-QUERY-OK" in out.stdout
+    assert "LSM-SPMD-QUERY-TILED-OK" in out.stdout
     assert "LSM-SPMD-SCAN-OK" in out.stdout
     assert "LSM-SPMD-OK" in out.stdout

@@ -22,7 +22,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.db.kvstore import COMBINERS, ShardedTable
+from repro.db.kvstore import COMBINERS, ShardedTable, shard_of
 from repro.db.lsm import engine as lsm_engine
 from repro.obs import default_registry
 from repro.kernels.common import I32_MAX
@@ -287,6 +287,111 @@ def test_fused_range_scan_is_one_dispatch(monkeypatch):
     r2, c2, v2 = st_.scan_range(lo, hi, width=16)
     assert _ctr("lsm_scan_widen_retries", "one_scan") == retries0 + 1
     _check_close(_as_dict(r2, c2, v2), want, "widen-retry-scan", (lo, hi))
+
+
+def test_tiled_large_batch_matches_all_paths():
+    """Batches far above ``fused_q_limit`` stay on the fused path, split
+    into query tiles: exactly ceil(unique/tile) dispatches per shard
+    (plus any widen retries), ``fused_tiles`` accounting for the split,
+    ZERO per-run launches — and results identical to the per-run
+    baseline, the legacy engine, and the oracle, with duplicate query ids
+    re-expanded."""
+    tile = 32
+    mk = dict(num_shards=2, capacity_per_shard=4096, batch_cap=256,
+              id_capacity=1 << 10, combiner="sum", memtable_cap=64)
+    lsm = ShardedTable("tiled_lsm", engine="lsm", l0_slots=3,
+                       fused_q_limit=tile, **mk)
+    single = ShardedTable("tiled_single", engine="single", **mk)
+    rng = np.random.default_rng(7)
+    oracle = {}
+
+    # level + L0 runs + memtable tail on both shards
+    for i in range(6):
+        r = rng.integers(0, 1 << 10, 48).astype(np.int32)
+        c = rng.integers(0, 4, 48).astype(np.int32)
+        v = rng.integers(-4, 5, 48).astype(np.float32)
+        lsm.insert(r, c, v)
+        single.insert(r, c, v)
+        _oracle_apply(oracle, r, c, v, "sum")
+        if i in (0, 2, 3):
+            lsm.flush()
+        if i == 3:
+            lsm.major_compact()
+    assert int(lsm._mem_n.max()) > 0  # a tail rides along in-dispatch
+
+    keys = np.asarray(sorted({k[0] for k in oracle}), np.int32)
+    absent = np.setdiff1d(np.arange(1 << 10, dtype=np.int32), keys)[:50]
+    q = np.concatenate([keys, keys[: len(keys) // 2], absent])
+    rng.shuffle(q)
+    q = q.astype(np.int32)
+    owner = shard_of(q, mk["num_shards"], mk["id_capacity"])
+    exp_disp, exp_tiles = 0, 0
+    for s in np.unique(owner):
+        u = len(np.unique(q[owner == s]))
+        t = -(-u // tile) if u > tile else 1
+        exp_disp += t
+        exp_tiles += t if t > 1 else 0
+    assert exp_tiles >= 4, exp_tiles  # the batch genuinely tiles
+
+    def deltas(fn):
+        names = ("fused_dispatches", "fused_widen_retries", "fused_tiles",
+                 "perrun_dispatches")
+        b = {n: _ctr("lsm_" + n, "tiled_lsm") for n in names}
+        out = fn()
+        return out, {n: _ctr("lsm_" + n, "tiled_lsm") - b[n] for n in names}
+
+    (fr, fc, fv), d = deltas(lambda: lsm.query_rows(q))
+    # ceil(unique/tile) dispatches per shard; ONE extra allowed per widen
+    assert d["fused_dispatches"] == exp_disp + d["fused_widen_retries"], \
+        (d, exp_disp)
+    assert d["fused_tiles"] == exp_tiles, (d, exp_tiles)
+    assert d["perrun_dispatches"] == 0, d  # the fallback is retired
+
+    lsm.fused_reads = False
+    (pr, pc, pv), d_pr = deltas(lambda: lsm.query_rows(q))
+    lsm.fused_reads = True
+    assert d_pr["fused_dispatches"] == 0 and d_pr["perrun_dispatches"] > 0
+    sr, sc, sv = single.query_rows(q)
+
+    want_r, want_c, want_v = [], [], []
+    by_row: dict = {}
+    for (a, b), x in oracle.items():
+        by_row.setdefault(a, []).append((b, x))
+    for qid in q.tolist():
+        for b, x in by_row.get(qid, ()):
+            want_r.append(qid)
+            want_c.append(b)
+            want_v.append(x)
+
+    def norm(r, c, v):
+        r, c, v = (np.asarray(r, np.int64), np.asarray(c, np.int64),
+                   np.asarray(v, np.float64))
+        order = np.lexsort((v, c, r))
+        return r[order], c[order], v[order]
+
+    want = norm(want_r, want_c, want_v)
+    for label, got in (("tiled-fused", (fr, fc, fv)),
+                       ("per-run", (pr, pc, pv)),
+                       ("single-engine", (sr, sc, sv))):
+        gr, gc, gv = norm(*got)
+        np.testing.assert_array_equal(gr, want[0], err_msg=label)
+        np.testing.assert_array_equal(gc, want[1], err_msg=label)
+        np.testing.assert_allclose(gv, want[2], rtol=1e-5, atol=1e-6,
+                                   err_msg=label)
+
+
+def test_empty_shard_fused_query_observes_latency():
+    """An empty shard's early return must still observe the per-shard
+    query latency histogram (pre-fix, the ``continue`` skipped it and the
+    shard's p99 silently excluded its cheapest reads)."""
+    st_ = ShardedTable("emptyobs", num_shards=1, capacity_per_shard=256,
+                       batch_cap=64, id_capacity=1 << 8, engine="lsm")
+    h = st_._h_shard_query[0]
+    before = h.count
+    r, _, _ = st_.query_rows(np.asarray([3, 9], np.int32))
+    assert len(r) == 0
+    assert st_.engine_stats()["fused_dispatches"] == 0  # no dispatch...
+    assert h.count == before + 1                        # ...still timed
 
 
 def test_major_compaction_only_compacts_full_shards():
