@@ -9,6 +9,9 @@ JSON, and compares each against the baselines committed at the repo root:
                              per-run baseline (min over BENCH_query rows)
   * ``scan_vs_point``      — fused range scans vs id-list point expansion
                              (min over scan rows with range_len >= 64)
+  * ``colsel_vs_filter``   — transpose-routed column selectors vs the
+                             O(nnz) full-scan-and-filter baseline (min
+                             over colsel rows with range_len >= 64)
   * ``lsm_vs_single``      — LSM ingest vs the single-run engine
                              (BENCH_ingest ``lsm_ingest_speedup``)
   * ``query_lsm_vs_single`` — LSM tiled fused reads vs the single-run
@@ -61,6 +64,11 @@ def extract_ratios(ingest: Optional[dict],
                  if r.get("range_len", 0) >= MIN_SCAN_LEN]
         if scans:
             out["scan_vs_point"] = min(scans)
+        colsel_rows = query.get("colsel_rows") or []
+        colsels = [r["colsel_speedup"] for r in colsel_rows
+                   if r.get("range_len", 0) >= MIN_SCAN_LEN]
+        if colsels:
+            out["colsel_vs_filter"] = min(colsels)
     if ingest:
         if "lsm_ingest_speedup" in ingest:
             out["lsm_vs_single"] = float(ingest["lsm_ingest_speedup"])
@@ -92,6 +100,11 @@ def extract_tail_ratios(ingest: Optional[dict],
         scans = [a for a in scans if a]
         if scans:
             out["scan_p99_over_p50"] = max(scans)
+        colsels = [amp(r.get("colsel_p99_us"), r.get("colsel_p50_us"))
+                   for r in (query.get("colsel_rows") or [])]
+        colsels = [a for a in colsels if a]
+        if colsels:
+            out["colsel_p99_over_p50"] = max(colsels)
     if ingest:
         for eng, rec in (ingest.get("engines") or {}).items():
             a = amp(rec.get("ingest_batch_p99_ms"),

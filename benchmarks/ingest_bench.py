@@ -365,6 +365,77 @@ def engine_compare(entries_per_shard: int = 1 << 18, shards: int = 2,
     return out
 
 
+def pair_ingest_advisory(entries_per_shard: int = 1 << 14, shards: int = 2,
+                         batch: int = 1 << 12, memtable: int = 1 << 13,
+                         seed: int = 5) -> dict:
+    """Dual-ingest write-amplification advisory for transpose pairs: the
+    same triple stream into a single table vs an engine-maintained pair
+    (``transpose=True``). The pair writes every entry to BOTH sibling
+    memtables (~2x device write amplification) but logs ONE pair-tagged
+    WAL record per batch (1x log bytes, one fsync — NOT 2x). Advisory
+    only, never gated: absolute walls on shared runners are noisy and the
+    pair cost model is structural."""
+    import os
+    import tempfile
+
+    id_cap = 1 << 22
+    total = entries_per_shard * shards
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, id_cap, total).astype(np.int32)
+    cols = rng.integers(0, id_cap, total).astype(np.int32)
+    vals = rng.normal(size=total).astype(np.float32)
+    reg = default_registry()
+    out = {"config": {"entries_per_shard": entries_per_shard,
+                      "shards": shards, "batch": batch,
+                      "memtable": memtable}}
+    with tempfile.TemporaryDirectory() as td:
+        walls = {}
+
+        def mk(name, transpose, wal):
+            return ShardedTable(
+                f"adv_{name}", num_shards=shards,
+                capacity_per_shard=int(entries_per_shard * 2.5),
+                batch_cap=batch, id_capacity=id_cap,
+                memtable_cap=memtable, engine="lsm",
+                wal_dir=os.path.join(td, wal) if wal else None,
+                transpose=transpose)
+
+        # off-clock warm pass per CONFIG (not just per store): both runs
+        # must hit fully compiled paths or the first config eats every
+        # first-compile cost and the ratio flips
+        for name, transpose in (("single", False), ("pair", True)):
+            warm = mk(f"warm_{name}", transpose, None)
+            warm.warmup()
+            for i in range(0, min(total, 4 * batch), batch):
+                warm.insert(rows[i:i + batch], cols[i:i + batch],
+                            vals[i:i + batch])
+            warm.flush()
+            warm.close()
+        for name, transpose in (("single", False), ("pair", True)):
+            st = mk(name, transpose, name)
+            st.warmup()
+            t0 = time.time()
+            for i in range(0, total, batch):
+                st.insert(rows[i:i + batch], cols[i:i + batch],
+                          vals[i:i + batch])
+            st.flush()
+            walls[name] = time.time() - t0
+            out[f"wal_bytes_{name}"] = sum(
+                c.value for c in reg.series("wal_append_bytes", log=name))
+            st.close()
+    out.update({
+        "ingest_s_single": walls["single"],
+        "ingest_s_pair": walls["pair"],
+        "pair_ingest_slowdown": walls["pair"] / walls["single"],
+        "wal_write_amp": out["wal_bytes_pair"] / out["wal_bytes_single"],
+    })
+    print(f"pair ingest advisory: slowdown="
+          f"{out['pair_ingest_slowdown']:.2f}x "
+          f"wal_write_amp={out['wal_write_amp']:.2f}x "
+          f"({total:,} entries)")
+    return {"pair_ingest": out}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -389,6 +460,8 @@ def main() -> None:
         result = engine_compare(entries_per_shard=eps, shards=args.shards,
                                 batch=max(1 << 10, mem // 2), memtable=mem,
                                 repeats=args.repeats)
+        result.update(pair_ingest_advisory(entries_per_shard=min(eps, 1 << 14),
+                                           shards=args.shards))
         result["mode"] = "smoke" if args.smoke else "compare"
         with open(args.out, "w") as f:
             json.dump(result, f, indent=1)

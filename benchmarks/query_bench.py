@@ -87,20 +87,27 @@ def fig4(scale: int = 13, degrees=(1, 10, 100, 1000), reps: int = 5):
 
 def _build_lsm_serving_state(n_l0_runs: int, with_levels: bool,
                              shards: int = 2, mem: int = 4096,
-                             tail: int = 256, seed: int = 0):
+                             tail: int = 256, seed: int = 0,
+                             transpose: bool = False,
+                             col_space: int = 1 << 10):
     """An LSM table in point-read serving shape: ``n_l0_runs`` resident L0
     runs (plus two leveled runs when ``with_levels``) and a small unflushed
     memtable tail. Key ranges overlap across runs so blooms mostly hit —
-    the per-run baseline gets no cheap range-skips."""
-    st = ShardedTable("qbench", num_shards=shards,
+    the per-run baseline gets no cheap range-skips. ``transpose=True``
+    builds an engine-maintained pair (column-selector benches);
+    ``col_space`` widens the col universe so col ranges behave like row
+    ranges."""
+    st = ShardedTable("qbench" + ("_pair" if transpose else ""),
+                      num_shards=shards,
                       capacity_per_shard=1 << 18, batch_cap=mem,
                       id_capacity=1 << 22, memtable_cap=mem,
-                      l0_slots=max(8, n_l0_runs + 2), engine="lsm")
+                      l0_slots=max(8, n_l0_runs + 2), engine="lsm",
+                      transpose=transpose)
     rng = np.random.default_rng(seed)
 
     def fill(n):
         st.insert(rng.integers(0, 1 << 22, n).astype(np.int32),
-                  rng.integers(0, 1 << 10, n).astype(np.int32),
+                  rng.integers(0, col_space, n).astype(np.int32),
                   rng.normal(size=n).astype(np.float32))
 
     if with_levels:
@@ -223,6 +230,76 @@ def scan_read_compare(reps: int = 30, lengths=(64, 256, 1024),
     return result
 
 
+def colsel_read_compare(reps: int = 30, lengths=(64, 256, 1024),
+                        out: str = None) -> dict:
+    """Column-selector A/B on an engine-maintained transpose PAIR: the
+    transpose-routed fused scan (``scan_col_range``, a fence-bracketed
+    range scan over ``A^T``) vs the O(nnz) full-scan-and-host-filter
+    baseline (what column selectors execute on single tables), with the
+    same-length ROW range scan as reference — the design target is column
+    selectors within ~1.5x of row range scans, not O(nnz). Emits
+    ``colsel_rows`` for ``BENCH_query.json``; the CI gate tracks the
+    worst colsel/filter ratio (``colsel_vs_filter``)."""
+    rng = np.random.default_rng(13)
+    st = _build_lsm_serving_state(4, True, transpose=True,
+                                  col_space=1 << 22)
+    resident = max(st.t_store._runs.resident_runs(s)
+                   for s in range(st.t_store.S))
+    present_cols = np.sort(np.asarray(st.t_store.scan_shard(0)[0]))
+    result = {"colsel_config": {"reps": reps,
+                                "sibling_resident_runs_per_shard": resident},
+              "colsel_rows": []}
+    filter_reps = max(reps // 5, 3)
+    for length in lengths:
+        los = [int(present_cols[int(i)]) for i in
+               rng.integers(0, max(len(present_cols) - 1, 1), 8)]
+        los = [min(lo, (1 << 22) - length) for lo in los]
+        st.scan_col_range(los[0], los[0] + length)   # warm the jit caches
+        st.scan_range(los[0], los[0] + length)
+        st.scan()
+        d0 = st.t_store.engine_stats()["scan_dispatches"]
+        st.t_store._h_scan.reset()
+        t0 = time.time()
+        for i in range(reps):
+            lo = los[i % len(los)]
+            st.scan_col_range(lo, lo + length)
+        colsel_us = (time.time() - t0) / reps * 1e6
+        colsel_tail = st.t_store._h_scan.percentiles()
+        dispatches = (st.t_store.engine_stats()["scan_dispatches"] - d0) \
+            / reps
+        t0 = time.time()
+        for i in range(filter_reps):  # O(nnz) full scan + host isin
+            lo = los[i % len(los)]
+            r, c, v = st.scan()
+            keep = (c >= lo) & (c < lo + length)
+            r, c, v = r[keep], c[keep], v[keep]
+        filter_us = (time.time() - t0) / filter_reps * 1e6
+        t0 = time.time()
+        for i in range(reps):  # row-scan reference (same range length)
+            lo = los[i % len(los)]
+            st.scan_range(lo, lo + length)
+        rowscan_us = (time.time() - t0) / reps * 1e6
+        row = {"range_len": length, "colsel_us": colsel_us,
+               "full_scan_filter_us": filter_us,
+               "rowscan_us": rowscan_us,
+               "colsel_speedup": filter_us / colsel_us,
+               "colsel_vs_rowscan": colsel_us / rowscan_us,
+               "colsel_p50_us": colsel_tail["p50"] * 1e6,
+               "colsel_p99_us": colsel_tail["p99"] * 1e6,
+               "sibling_scan_dispatches_per_call": dispatches}
+        result["colsel_rows"].append(row)
+        print(f"range_len={length:5d} colsel={colsel_us:9.1f}us "
+              f"full-scan+filter={filter_us:10.1f}us "
+              f"speedup={row['colsel_speedup']:6.2f}x "
+              f"vs-rowscan={row['colsel_vs_rowscan']:.2f}x "
+              f"dispatches/scan={dispatches:.2f}")
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {out}")
+    return result
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
@@ -231,15 +308,21 @@ if __name__ == "__main__":
     ap.add_argument("--scan-compare", action="store_true",
                     help="range-scan vs point-expansion A/B "
                          "(scan_rows in BENCH_query.json)")
+    ap.add_argument("--colsel-compare", action="store_true",
+                    help="column selector via transpose pair vs "
+                         "full-scan-and-filter A/B "
+                         "(colsel_rows in BENCH_query.json)")
     ap.add_argument("--out", default="BENCH_query.json")
     ap.add_argument("--reps", type=int, default=100)
     args = ap.parse_args()
-    if args.fused_compare or args.scan_compare:
+    if args.fused_compare or args.scan_compare or args.colsel_compare:
         result = {}
         if args.fused_compare:
             result.update(fused_read_compare(reps=args.reps))
         if args.scan_compare:
             result.update(scan_read_compare(reps=max(args.reps // 2, 10)))
+        if args.colsel_compare:
+            result.update(colsel_read_compare(reps=max(args.reps // 2, 10)))
         with open(args.out, "w") as f:
             json.dump(result, f, indent=1)
         print(f"wrote {args.out}")

@@ -12,11 +12,22 @@
 The paper's contribution is hiding JavaCall/JVM friction behind this API;
 our adaptation hides dictionary-encoding, fixed-capacity padding, and mesh
 sharding behind the *same* API (DESIGN §2).
+
+Binding a pair creates ONE engine-maintained transpose pair: ``put`` lands
+each batch in ``A`` and ``A^T`` behind a single pair-tagged WAL record
+(one fsync — crash recovery replays both sides or neither, so the pair
+can never diverge), and ``Tedge[:, "v1,"]`` compiles to a fence-bracketed
+range scan on the transpose sibling instead of an O(nnz)
+full-scan-and-filter. Selectors compile to ``ReadPlan`` values
+(``resolve_selector_plan``) that record axis, kind, and routing for both
+the row and column dimension.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
+import warnings
 from typing import Optional, Tuple, Union
 
 import numpy as np
@@ -25,9 +36,64 @@ from ..core.assoc import Assoc, split_str
 from ..core.dictionary import StringDict
 from ..obs import Histogram, default_registry
 from . import batching
-from .kvstore import ShardedTable
+from .kvstore import ShardedTable, StoreConfig
 
 _INITIALIZED = False
+
+
+def _sel_is_all(sel) -> bool:
+    """Is this selector the unconstrained axis (``:`` / ``None`` /
+    ``slice(None)``)? The ONE place this check lives — every consumer
+    goes through ``resolve_selector_plan``."""
+    if sel is None:
+        return True
+    if isinstance(sel, str):
+        return sel == ":"
+    return isinstance(sel, slice) and sel == slice(None)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReadPlan:
+    """A compiled selector for ONE axis of a D4M read.
+
+    ``resolve_selector_plan`` produces these for rows AND columns alike —
+    the selector algebra is axis-symmetric; only the *execution* differs
+    (``route``): a column plan executes natively as a residual filter on
+    a row-driven read, or routes to the transpose sibling's fused scan
+    when the store maintains one.
+
+    Fields (unused ones stay None):
+
+    * ``axis``  — "row" | "col": which axis the selector constrains
+    * ``kind``  — "all" (unconstrained), "ids" (point id set), or
+      "range" (contiguous id range [lo, hi))
+    * ``ids``   — kind="ids": sorted unique int32 ids to point-query
+    * ``lo, hi``— kind="range": the id range endpoints
+    * ``filter``— kind="range" with dict-absent holes: the sorted id
+      subset actually selected (scan the dense superset, keep these)
+    * ``route`` — "native" | "transpose": set at execution time
+    """
+    axis: str = "row"
+    kind: str = "all"
+    ids: Optional[np.ndarray] = None
+    lo: Optional[int] = None
+    hi: Optional[int] = None
+    filter: Optional[np.ndarray] = None
+    route: str = "native"
+
+    def with_route(self, route: str) -> "ReadPlan":
+        return dataclasses.replace(self, route=route)
+
+    def filter_ids(self) -> Optional[np.ndarray]:
+        """The id set this plan keeps (for residual-filter use): ``ids``
+        for point plans, ``filter`` (or the dense [lo, hi) range) for
+        range plans, None for "all" (keeps everything)."""
+        if self.kind == "all":
+            return None
+        if self.kind == "ids":
+            return self.ids
+        return (self.filter if self.filter is not None
+                else np.arange(self.lo, self.hi, dtype=np.int32))
 
 
 # ---------------------------------------------------------------------------
@@ -107,45 +173,49 @@ def dbinit() -> None:
 
 
 def dbsetup(instance: str, conf: Optional[dict] = None, **kw) -> "DBserver":
-    """Create a server binding (conf dict stands in for db.conf)."""
+    """Create a server binding (conf dict stands in for db.conf).
+
+    The engine/topology keys of ``conf`` build ONE ``StoreConfig`` here;
+    every table the server binds shares that record by reference (no
+    per-layer kwargs relay), and checkpoints round-trip it through the
+    snapshot manifest."""
     dbinit()
     cfg = dict(conf or {})
     cfg.update(kw)
-    return DBserver(instance, **cfg)
+    char_budget = cfg.pop("char_budget", batching.DEFAULT_CHAR_BUDGET)
+    wal_root = cfg.pop("wal_root", None)
+    config = cfg.pop("config", None)
+    if config is None:
+        config = StoreConfig(**cfg)
+    elif cfg:
+        config = config.replace(**cfg)
+    return DBserver(instance, config=config, char_budget=char_budget,
+                    wal_root=wal_root)
 
 
 class DBserver:
-    """Connection holder; indexing binds tables (creating them on demand)."""
+    """Connection holder; indexing binds tables (creating them on demand).
 
-    def __init__(self, instance: str, num_shards: int = 4,
-                 capacity_per_shard: int = 1 << 18, batch_cap: int = 1 << 15,
-                 id_capacity: int = 1 << 22,
+    ``config`` (a ``kvstore.StoreConfig``) is the single source of truth
+    for engine/topology settings; the legacy per-field attributes
+    (``num_shards``, ``engine``, ...) are read-only views of it. Extra
+    keyword arguments override config fields (``DBserver("x",
+    num_shards=8)`` still works)."""
+
+    def __init__(self, instance: str, config: StoreConfig = None,
                  char_budget: int = batching.DEFAULT_CHAR_BUDGET,
-                 use_pallas: bool = False,  # True = TPU kernels (interpret
-                 # mode on CPU is validation-only; XLA path is the CPU path)
-                 engine: str = "lsm",  # storage engine: "lsm" (leveled
-                 # runs, db/lsm) or "single" (legacy one-run tablet)
-                 fused_reads: bool = True,  # LSM point reads fused-dispatch
-                 fused_q_limit: int = 512,  # query tile: larger batches
-                 # split into fused_q_limit-wide tiles (one jit entry each)
-                 l0_slots: int = 4,   # LSM L0 runs per shard before a
-                 fanout: int = 4,     # major compaction; level growth rate
-                 wal_root: str = None):  # durability root: each table logs
+                 wal_root: str = None,  # durability root: each table logs
                  # to <wal_root>/<table>/, the shared key dictionary to
                  # <wal_root>/keydict.{json,log}
-        assert num_shards * id_capacity < 2 ** 31, "id space must fit int32 routing"
+                 **kw):
+        cfg = config if config is not None else StoreConfig()
+        if kw:
+            cfg = cfg.replace(**kw)  # unknown keys raise, as before
+        assert cfg.num_shards * cfg.id_capacity < 2 ** 31, \
+            "id space must fit int32 routing"
         self.instance = instance
-        self.num_shards = num_shards
-        self.capacity_per_shard = capacity_per_shard
-        self.batch_cap = batch_cap
-        self.id_capacity = id_capacity
+        self.config = cfg
         self.char_budget = char_budget
-        self.use_pallas = use_pallas
-        self.engine = engine
-        self.fused_reads = fused_reads
-        self.fused_q_limit = fused_q_limit
-        self.l0_slots = l0_slots
-        self.fanout = fanout
         self.keydict = StringDict()          # shared row/col key universe
         self._sorted_keys: Optional[np.ndarray] = None
         self.tables: dict = {}
@@ -153,6 +223,18 @@ class DBserver:
         self._keydict_journal: Optional[_DictJournal] = None
         if wal_root is not None:
             self.attach_wal_root(wal_root)
+
+    # read-only views of the shared StoreConfig (legacy attribute API)
+    num_shards = property(lambda self: self.config.num_shards)
+    capacity_per_shard = property(lambda self: self.config.capacity_per_shard)
+    batch_cap = property(lambda self: self.config.batch_cap)
+    id_capacity = property(lambda self: self.config.id_capacity)
+    use_pallas = property(lambda self: self.config.use_pallas)
+    engine = property(lambda self: self.config.engine)
+    fused_reads = property(lambda self: self.config.fused_reads)
+    fused_q_limit = property(lambda self: self.config.fused_q_limit)
+    l0_slots = property(lambda self: self.config.l0_slots)
+    fanout = property(lambda self: self.config.fanout)
 
     def attach_wal_root(self, wal_root: str) -> None:
         """Enable durability under ``wal_root``. Call AFTER loading any
@@ -167,7 +249,7 @@ class DBserver:
     def __getitem__(self, names: Union[str, Tuple[str, str]]):
         if isinstance(names, tuple):
             t, tt = names
-            return TablePair(self._bind(t), self._bind(tt))
+            return self._bind_pair(t, tt)
         return self._bind(names)
 
     def _bind(self, name: str) -> "Table":
@@ -175,11 +257,33 @@ class DBserver:
             self.tables[name] = Table(self, name)
         return self.tables[name]
 
+    def _bind_pair(self, t: str, tt: str) -> "TablePair":
+        """Bind ``DB[t, tt]``: ONE transpose-enabled store (the engine
+        maintains ``A^T`` as a sibling shard set behind the same WAL),
+        with ``tt`` bound as a read-facing transposed view of it."""
+        tbl = self.tables.get(t)
+        if tbl is None:
+            tbl = Table(self, t, transpose=True)
+            self.tables[t] = tbl
+        elif getattr(getattr(tbl, "store", None), "t_store", None) is None:
+            raise ValueError(
+                f"table {t!r} is already bound without a transpose "
+                "sibling; delete it before re-binding as a pair")
+        view = self.tables.get(tt)
+        if not isinstance(view, TransposedView):
+            view = TransposedView(tbl, tt)
+            self.tables[tt] = view
+        return TablePair(tbl, view)
+
     def ls(self):
         return sorted(self.tables)
 
     def drop(self, name: str) -> None:
-        self.tables.pop(name, None)
+        """Unbind a table AND release its store buffers (the old pop-only
+        drop leaked device memtables and the open WAL handle)."""
+        t = self.tables.pop(name, None)
+        if isinstance(t, Table) and not t._deleted:
+            t._mark_deleted()
 
     # ----------------------------------------------------- key resolution
     def encode_keys(self, strs: np.ndarray) -> np.ndarray:
@@ -218,19 +322,9 @@ class DBserver:
         hi = np.searchsorted(skeys, hi_key, side="right")
         return np.sort(sids[lo:hi]).astype(np.int32)
 
-    def resolve_selector(self, sel) -> Optional[np.ndarray]:
-        """D4M selector -> row ids; None means 'all' (full scan).
-
-        Accumulo scans string ranges server-side; the adaptation expands
-        range/prefix selectors to id lists via the key dictionary (it knows
-        the whole key universe), then issues batched point queries.
-        """
-        if sel is None or sel == ":" or (isinstance(sel, slice) and sel == slice(None)):
-            return None
-        toks = split_str(sel) if isinstance(sel, str) else np.asarray(
-            [str(t) for t in np.asarray(sel).ravel()], dtype=object)
-        if len(toks) == 3 and toks[1] == ":":
-            return self._span_ids(toks[0], toks[2])
+    def _point_ids(self, toks) -> np.ndarray:
+        """Expand explicit key tokens (and ``prefix*`` tokens) to the
+        sorted unique id set present in the dictionary."""
         out = []
         for t in toks:
             if t.endswith("*"):
@@ -243,36 +337,46 @@ class DBserver:
             return np.zeros(0, dtype=np.int32)
         return np.unique(np.concatenate(out))
 
+    def resolve_selector(self, sel) -> Optional[np.ndarray]:
+        """Deprecated: D4M selector -> id list (None means 'all').
+
+        Thin shim over ``resolve_selector_plan`` kept for callers that
+        still want a materialized id set; new code should consume the
+        ``ReadPlan`` directly (range plans there scan without expanding
+        to O(range) point ids)."""
+        warnings.warn(
+            "resolve_selector() is deprecated; use resolve_selector_plan()"
+            " and consume the ReadPlan", DeprecationWarning, stacklevel=2)
+        return self.resolve_selector_plan(sel).filter_ids()
+
     # a dict-range id set denser than this scans the covering id range in
     # one fused dispatch and filters the stragglers on the host; sparser
     # sets fall back to batched point queries
     RANGE_SCAN_DENSITY = 0.5
 
-    def resolve_selector_plan(self, sel):
-        """D4M selector -> read plan, WITHOUT materializing an id list
+    def resolve_selector_plan(self, sel, axis: str = "row") -> ReadPlan:
+        """D4M selector -> ``ReadPlan``, WITHOUT materializing an id list
         when a server-side range scan can serve it (Accumulo scans string
         ranges tablet-side; ``T["a,:,c,", :]`` should not expand to
         O(range) point queries).
 
-        Returns one of::
+        The plan's ``kind`` is "all" (unconstrained axis), "ids" (point
+        queries over an explicit id set), or "range" ([lo, hi) id-range
+        scan, with ``filter`` carrying the dict-present subset when the
+        string range has id holes denser than ``RANGE_SCAN_DENSITY``).
 
-            ("all", None)              full scan
-            ("ids", ids)               batched point queries (fallback)
-            ("range", (lo, hi, filt))  contiguous id-range scan [lo, hi);
-                                       ``filt`` is None when the dict ids
-                                       inside the string range are exactly
-                                       [lo, hi) (scan alone answers), else
-                                       the sorted id subset to keep after
-                                       a dense-superset scan
+        The SAME compilation serves both axes (rows and columns share one
+        key dictionary): ``axis="col"`` plans route to the transpose
+        sibling's fused scan on pair tables, or execute as residual
+        filters pushed into the row-driven dispatch otherwise.
 
         Range/prefix selectors map through the key dictionary's sorted-key
         snapshot: the matching ids are contiguous whenever keys were
         interned in lexicographic order (sorted ingest, the common D4M
         bulk-load shape) — then the scan needs no id list at all.
         """
-        if sel is None or sel == ":" or (isinstance(sel, slice)
-                                         and sel == slice(None)):
-            return ("all", None)
+        if _sel_is_all(sel):
+            return ReadPlan(axis=axis, kind="all")
         toks = split_str(sel) if isinstance(sel, str) else np.asarray(
             [str(t) for t in np.asarray(sel).ravel()], dtype=object)
         span_ids = None
@@ -281,16 +385,17 @@ class DBserver:
         elif len(toks) == 1 and toks[0].endswith("*"):
             span_ids = self._span_ids(toks[0][:-1], toks[0][:-1] + "￿")
         if span_ids is None:
-            return ("ids", self.resolve_selector(sel))
+            return ReadPlan(axis=axis, kind="ids", ids=self._point_ids(toks))
         if len(span_ids) == 0:
-            return ("ids", span_ids)
+            return ReadPlan(axis=axis, kind="ids", ids=span_ids)
         lo_id, hi_id = int(span_ids[0]), int(span_ids[-1]) + 1
         span = hi_id - lo_id
         if span == len(span_ids):
-            return ("range", (lo_id, hi_id, None))
+            return ReadPlan(axis=axis, kind="range", lo=lo_id, hi=hi_id)
         if len(span_ids) >= self.RANGE_SCAN_DENSITY * span:
-            return ("range", (lo_id, hi_id, span_ids))
-        return ("ids", span_ids)
+            return ReadPlan(axis=axis, kind="range", lo=lo_id, hi=hi_id,
+                            filter=span_ids)
+        return ReadPlan(axis=axis, kind="ids", ids=span_ids)
 
     # -------------------------------------------------------- observability
     # per-op latency histograms emitted by ShardedTable / LSMRuns, keyed by
@@ -356,6 +461,11 @@ class DBserver:
                     "scan_s": pooled("db_shard_op_latency_s", [name],
                                      shard=s, op="scan"),
                 }
+            if getattr(store, "t_store", None) is not None:
+                tbl["transpose"] = {
+                    "sibling": store.t_store.name,
+                    "counters": store.t_store.engine_stats(),
+                }
             out["tables"][name] = tbl
         agg_counters: dict = {}
         for name in live:
@@ -384,22 +494,17 @@ class DBserver:
 class Table:
     """A bound table: ingest Assocs/triples, query with Assoc syntax."""
 
-    def __init__(self, server: DBserver, name: str, combiner: str = "last"):
+    def __init__(self, server: DBserver, name: str, combiner: str = "last",
+                 transpose: bool = False):
         self.server = server
         self.name = name
         wal_dir = (os.path.join(server.wal_root, name)
                    if getattr(server, "wal_root", None) else None)
-        self.store = ShardedTable(
-            name, num_shards=server.num_shards,
-            capacity_per_shard=server.capacity_per_shard,
-            batch_cap=server.batch_cap, id_capacity=server.id_capacity,
-            combiner=combiner, use_pallas=server.use_pallas,
-            engine=getattr(server, "engine", "lsm"),
-            fused_reads=getattr(server, "fused_reads", True),
-            fused_q_limit=getattr(server, "fused_q_limit", 512),
-            l0_slots=getattr(server, "l0_slots", 4),
-            fanout=getattr(server, "fanout", 4),
-            wal_dir=wal_dir)
+        cfg = server.config
+        if transpose:
+            cfg = cfg.replace(transpose=True)
+        self.store = ShardedTable(name, combiner=combiner, wal_dir=wal_dir,
+                                  config=cfg)
         self.valdict: Optional[StringDict] = None  # set on first string put
         self._valdict_journal: Optional[_DictJournal] = None
         self._deleted = False
@@ -440,6 +545,8 @@ class Table:
 
     def _mark_deleted(self) -> None:
         """delete(): free the store's buffers and poison this handle."""
+        if self._deleted:
+            return
         self._deleted = True
         self.store.close()
 
@@ -494,29 +601,98 @@ class Table:
     def __getitem__(self, key) -> Assoc:
         self._check_live()
         rsel, csel = key
-        kind, arg = self.server.resolve_selector_plan(rsel)
-        cids = self.server.resolve_selector(csel)
-        if kind == "all":  # full scan (optionally filtered by column)
-            r, c, v = self.store.scan()
-        elif kind == "range":  # contiguous rows: ONE scan per shard, no
-            lo, hi, filt = arg  # id-list point expansion
-            r, c, v = self.store.scan_range(lo, hi)
-            if filt is not None:  # dense superset: drop dict-absent ids
-                keep = np.isin(r, filt)
-                r, c, v = r[keep], c[keep], v[keep]
-        else:
-            r, c, v = self.store.query_rows(arg)
-        if cids is not None:  # single tables filter columns client-side;
-            keep = np.isin(c, cids)  # TablePair routes to the transpose table
-            r, c, v = r[keep], c[keep], v[keep]
+        rplan = self.server.resolve_selector_plan(rsel, axis="row")
+        cplan = self.server.resolve_selector_plan(csel, axis="col")
+        r, c, v = self._execute(rplan, cplan)
         return self._assemble(r, c, v)
+
+    def _execute(self, rplan: ReadPlan, cplan: ReadPlan):
+        """Run a (row-plan, col-plan) pair against the store.
+
+        Routing rules (db/README.md "Transpose pairs & read planning"):
+
+        * unconstrained rows + constrained cols on a pair table → route
+          the column plan to the transpose sibling's fused scan/query
+          (the column range is a fence-bracketed ROW range over A^T);
+        * otherwise the row plan drives the dispatch and the column
+          plan's id set pushes down as an on-device residual filter
+          (``col_filter``) inside the fused kernels.
+        """
+        store = self.store
+        if (rplan.kind == "all" and cplan.kind != "all"
+                and getattr(store, "t_store", None) is not None):
+            cplan = cplan.with_route("transpose")
+            if cplan.kind == "range":
+                r, c, v = store.scan_col_range(cplan.lo, cplan.hi)
+                if cplan.filter is not None:  # dict-absent id holes
+                    keep = np.isin(c, cplan.filter)
+                    r, c, v = r[keep], c[keep], v[keep]
+            else:
+                r, c, v = store.query_cols(cplan.ids)
+            return r, c, v
+        cfilt = cplan.filter_ids()  # pushed into the fused dispatch
+        if rplan.kind == "range":  # contiguous rows: ONE scan per shard,
+            r, c, v = store.scan_range(rplan.lo, rplan.hi,  # no id-list
+                                       col_filter=cfilt)    # expansion
+            if rplan.filter is not None:  # dense superset: drop absents
+                keep = np.isin(r, rplan.filter)
+                r, c, v = r[keep], c[keep], v[keep]
+            return r, c, v
+        if rplan.kind == "ids":
+            return store.query_rows(rplan.ids, col_filter=cfilt)
+        r, c, v = store.scan()  # full scan; filter columns client-side
+        if cfilt is not None:
+            keep = np.isin(c, cfilt)
+            r, c, v = r[keep], c[keep], v[keep]
+        return r, c, v
+
+
+class TransposedView:
+    """Read/write-facing ``A^T`` binding over a pair table.
+
+    The paper binds ``DB["my_Tedge", "my_TedgeT"]`` as two tables; here
+    the second name is a VIEW of the first — the engine already maintains
+    the transpose sibling shard set, so the view swaps selectors (and
+    transposes results) rather than owning storage. ``store`` is None on
+    purpose: server bookkeeping (metrics, live lists) skips views and
+    reports the pair once, under the primary's name."""
+
+    store = None
+
+    def __init__(self, table: Table, name: str):
+        self.table = table
+        self.name = name
+
+    @property
+    def _deleted(self) -> bool:
+        return self.table._deleted
+
+    def nnz(self) -> int:
+        return self.table.nnz()
+
+    def put(self, a: Assoc) -> None:
+        self.table.put(a.transpose())
+
+    def put_triple(self, rows, cols, vals) -> None:
+        self.table.put_triple(cols, rows, vals)
+
+    putTriple = put_triple
+
+    def __getitem__(self, key) -> Assoc:
+        rsel, csel = key
+        return self.table[csel, rsel].transpose()
 
 
 class TablePair:
     """Edge table + its transpose; column queries auto-route to the
-    transpose table 'for speed' (paper §III-B)."""
+    transpose sibling 'for speed' (paper §III-B).
 
-    def __init__(self, table: Table, table_t: Table):
+    Since the engine maintains ``A^T`` itself (one pair-tagged WAL frame
+    per ``put`` batch — see the module docstring), the pair handle is a
+    thin facade: ingest and queries go to the primary table, whose
+    ``_execute`` already routes column plans to the sibling."""
+
+    def __init__(self, table: Table, table_t: TransposedView):
         self.table = table
         self.table_t = table_t
 
@@ -524,26 +700,34 @@ class TablePair:
     def name(self) -> str:
         return self.table.name
 
+    @property
+    def name_t(self) -> str:
+        return self.table_t.name
+
     def nnz(self) -> int:
         return self.table.nnz()
 
     def put(self, a: Assoc) -> None:
-        self.table.put(a)
-        self.table_t.put(a.transpose())
+        self.table.put(a)  # the engine dual-ingests: ONE WAL frame
 
     def put_triple(self, rows, cols, vals) -> None:
         self.table.put_triple(rows, cols, vals)
-        self.table_t.put_triple(cols, rows, vals)
 
     putTriple = put_triple
 
+    def checkpoint(self) -> str:
+        """One durability point covers BOTH sides (the sibling's runs ride
+        in the same snapshot npz; one atomic replace)."""
+        return self.table.checkpoint()
+
+    def metrics(self) -> dict:
+        """This pair's slice of ``server.metrics()`` (primary table entry,
+        which carries the sibling under ``"transpose"``)."""
+        snap = self.table.server.metrics()
+        return snap["tables"].get(self.table.name, {})
+
     def __getitem__(self, key) -> Assoc:
-        rsel, csel = key
-        row_all = rsel is None or rsel == ":" or (
-            isinstance(rsel, slice) and rsel == slice(None))
-        if row_all and csel is not None:
-            return self.table_t[csel, rsel].transpose()  # transpose routing
-        return self.table[rsel, csel]
+        return self.table[key]
 
 
 def put(table, a: Assoc) -> None:
@@ -554,7 +738,7 @@ def putTriple(table, rows, cols, vals) -> None:
     table.put_triple(rows, cols, vals)
 
 
-def recover_connector(wal_root: str, name: str,
+def recover_connector(wal_root: str, name,
                       instance: str = "recovered"):
     """Rebuild a connector-level (string-keyed) table after a crash.
 
@@ -564,19 +748,27 @@ def recover_connector(wal_root: str, name: str,
     fresh ``DBserver`` — so ``T["a,", :]`` works again, not just raw id
     queries. Returns ``(server, table)``; both keep journaling to the same
     ``wal_root``.
+
+    Pass a 2-tuple ``(name, name_t)`` to recover a transpose PAIR: the
+    manifest's StoreConfig carries ``transpose=True``, so the recovered
+    store rebuilds both sibling shard sets (snapshot + one pair-tagged WAL
+    replay) and the result is ``(server, TablePair)`` with ``name_t``
+    bound as the transposed view.
     """
     from .lsm.manifest import MANIFEST
     from .lsm.manifest import recover as recover_store
 
+    pair_name = None
+    if isinstance(name, tuple):
+        name, pair_name = name
     table_dir = os.path.join(wal_root, name)
     with open(os.path.join(table_dir, MANIFEST)) as f:
         man = json.load(f)
     cfg = man["config"]
-    server = DBserver(instance, num_shards=cfg["num_shards"],
-                      capacity_per_shard=cfg["capacity_per_shard"],
-                      batch_cap=cfg["batch_cap"],
-                      id_capacity=cfg["id_capacity"],
-                      use_pallas=cfg["use_pallas"], engine="lsm")
+    server = DBserver(
+        instance,
+        config=StoreConfig.from_manifest(cfg).replace(engine="lsm",
+                                                      transpose=False))
     # dictionary state must load BEFORE the journal re-opens for append
     server.keydict = _load_dict(wal_root, "keydict")
     server.attach_wal_root(wal_root)
@@ -587,6 +779,14 @@ def recover_connector(wal_root: str, name: str,
         if len(valdict) == 0:
             valdict = None
     table = Table._from_store(server, name, store, valdict)
+    if pair_name is not None:
+        if store.t_store is None:
+            raise ValueError(
+                f"table {name!r} was not checkpointed as a transpose pair; "
+                "recover it by its single name")
+        view = TransposedView(table, pair_name)
+        server.tables[pair_name] = view
+        return server, TablePair(table, view)
     return server, table
 
 
@@ -596,10 +796,13 @@ def delete(table) -> None:
     The bound handle is poisoned: subsequent put/__getitem__/nnz raise
     RuntimeError instead of silently operating on an orphaned store.
     Re-binding the same name via ``DB[name]`` creates a fresh table.
+    Deleting a pair drops BOTH bindings; the sibling shard set is freed
+    by the primary store's close (it owns the sibling).
     """
     if isinstance(table, TablePair):
-        delete(table.table)
-        delete(table.table_t)
+        server = table.table.server
+        server.drop(table.table_t.name)  # view: pop only (no store)
+        server.drop(table.table.name)    # closes primary + sibling
         return
     table.server.drop(table.name)
-    table._mark_deleted()
+    table._mark_deleted()  # idempotent if drop() already closed it

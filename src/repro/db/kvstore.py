@@ -46,6 +46,50 @@ from ..kernels.segment_reduce import segment_sum
 COMBINERS = ("last", "sum", "min", "max")
 
 
+@dataclasses.dataclass(frozen=True)
+class StoreConfig:
+    """Engine/topology configuration for one store.
+
+    Built ONCE (``db.connector.dbsetup``) and passed by reference down
+    the DBserver → Table → ShardedTable chain instead of the old
+    per-layer kwargs relay; round-trips through the snapshot manifest
+    (``lsm.manifest``) so recovery rebuilds stores from the same record
+    without re-listing fields by hand. Per-table knobs that genuinely
+    vary per table (combiner, bloom sizing, wal_dir) stay constructor
+    arguments.
+
+    ``transpose=True`` makes the store maintain its transpose ``A^T`` as
+    an engine-level sibling shard set (``ShardedTable.t_store``): every
+    ingest batch lands in both through ONE pair-tagged WAL record, and
+    column selectors become fence-rangeable scans on the sibling.
+    """
+    num_shards: int = 4
+    capacity_per_shard: int = 1 << 18
+    batch_cap: int = 1 << 15
+    id_capacity: int = 1 << 22
+    use_pallas: bool = False
+    engine: str = "lsm"
+    fused_reads: bool = True
+    fused_q_limit: int = 512
+    l0_slots: int = 4
+    fanout: int = 4
+    memtable_cap: int = None
+    transpose: bool = False
+
+    def replace(self, **kw) -> "StoreConfig":
+        return dataclasses.replace(self, **kw)
+
+    @classmethod
+    def from_manifest(cls, cfg: dict) -> "StoreConfig":
+        """Build from a manifest config dict. Tolerates the legacy
+        ``mem_cap`` key and ignores per-table fields stored alongside."""
+        known = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in cfg.items() if k in known}
+        if "memtable_cap" not in kw and "mem_cap" in cfg:
+            kw["memtable_cap"] = cfg["mem_cap"]
+        return cls(**kw)
+
+
 @functools.partial(
     jax.tree_util.register_dataclass, data_fields=["rows", "cols", "vals", "n"],
     meta_fields=[],
@@ -239,38 +283,74 @@ class ShardedTable:
     after a crash.
     """
 
-    def __init__(self, name: str, num_shards: int = 4,
-                 capacity_per_shard: int = 1 << 18, batch_cap: int = 1 << 15,
-                 id_capacity: int = 1 << 22, combiner: str = "last",
-                 use_pallas: bool = False, memtable_cap: int = None,
-                 engine: str = "lsm", l0_slots: int = 4, fanout: int = 4,
-                 wal_dir: str = None, fused_reads: bool = True,
-                 fused_q_limit: int = 512, bloom_bits_per_key=None,
-                 bloom_hashes=None):
+    def __init__(self, name: str, num_shards: int = None,
+                 capacity_per_shard: int = None, batch_cap: int = None,
+                 id_capacity: int = None, combiner: str = "last",
+                 use_pallas: bool = None, memtable_cap: int = None,
+                 engine: str = None, l0_slots: int = None, fanout: int = None,
+                 wal_dir: str = None, fused_reads: bool = None,
+                 fused_q_limit: int = None, bloom_bits_per_key=None,
+                 bloom_hashes=None, transpose: bool = None,
+                 config: StoreConfig = None):
         # use_pallas=True runs the TPU kernels (interpret-mode on CPU — for
         # validation only; the XLA path is the CPU-performance path)
         assert combiner in COMBINERS
-        if engine not in ("lsm", "single"):
-            raise ValueError(f"unknown engine {engine!r}")
+        # config is the canonical record (StoreConfig defaults when absent);
+        # explicit kwargs override it so existing call sites keep working
+        cfg = config if config is not None else StoreConfig()
+        overrides = {k: v for k, v in dict(
+            num_shards=num_shards, capacity_per_shard=capacity_per_shard,
+            batch_cap=batch_cap, id_capacity=id_capacity,
+            use_pallas=use_pallas, memtable_cap=memtable_cap, engine=engine,
+            l0_slots=l0_slots, fanout=fanout, fused_reads=fused_reads,
+            fused_q_limit=fused_q_limit, transpose=transpose).items()
+            if v is not None}
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        if cfg.engine not in ("lsm", "single"):
+            raise ValueError(f"unknown engine {cfg.engine!r}")
+        if cfg.transpose and cfg.engine != "lsm":
+            raise ValueError("transpose pairs require engine='lsm'")
+        self.config = cfg
         self.name = name
-        self.engine = engine
-        self.S = num_shards
-        self.cap = capacity_per_shard
-        self.batch_cap = batch_cap
-        self.id_capacity = id_capacity
+        self.engine = cfg.engine
+        self.S = cfg.num_shards
+        self.cap = cfg.capacity_per_shard
+        self.batch_cap = cfg.batch_cap
+        self.id_capacity = cfg.id_capacity
         self.combiner = combiner
-        self.use_pallas = use_pallas
+        self.use_pallas = cfg.use_pallas
         # fused_reads: serve LSM point queries via the fused path
         # (db.lsm.engine.query_shard_fused); fused_q_limit is the QUERY
         # TILE — batches beyond the tiny point bucket pad UP to it and
         # larger ones split into fixed-size tiles (one jit cache entry
         # serves every batch size, block bloom-gated per run), never the
         # per-run fallback. fused_reads=False keeps the per-run baseline.
-        self.fused_reads = fused_reads
-        self.fused_q_limit = fused_q_limit
-        self.mem_cap = memtable_cap or max(batch_cap * 4,
-                                           min(capacity_per_shard, 1 << 18))
+        self.fused_reads = cfg.fused_reads
+        self.fused_q_limit = cfg.fused_q_limit
+        # resolved locals for the body below (kwargs may have been None)
+        num_shards = cfg.num_shards
+        capacity_per_shard = cfg.capacity_per_shard
+        id_capacity = cfg.id_capacity
+        engine = cfg.engine
+        use_pallas = cfg.use_pallas
+        l0_slots = cfg.l0_slots
+        fanout = cfg.fanout
+        self.mem_cap = cfg.memtable_cap or max(
+            cfg.batch_cap * 4, min(cfg.capacity_per_shard, 1 << 18))
         self._closed = False
+        # engine-maintained transpose sibling: rows and cols share one id
+        # space (one keydict), so A^T routes through the same shard_of —
+        # no second dictionary. The sibling has NO WAL of its own: the
+        # primary logs each batch once, pair-tagged (see insert()).
+        self.t_store = None
+        if cfg.transpose:
+            self.t_store = ShardedTable(
+                name + "@T", combiner=combiner,
+                bloom_bits_per_key=bloom_bits_per_key,
+                bloom_hashes=bloom_hashes,
+                config=dataclasses.replace(cfg, transpose=False,
+                                           memtable_cap=self.mem_cap))
         # per-batch latency histograms + per-shard op counters/histograms
         # (repro.obs; series reset here so a fresh table reads zeros)
         self._reg = default_registry()
@@ -281,6 +361,9 @@ class ShardedTable:
                                             op="query")
         self._h_scan = self._reg.histogram("db_op_latency_s", table=name,
                                            op="scan")
+        # whole-table scans (the O(nnz) path selectors should AVOID —
+        # the one-dispatch tests assert this stays flat on routed reads)
+        self._c_full_scans = self._reg.counter("db_full_scans", table=name)
         self._c_shard_ingest = [
             self._reg.counter("db_ingest_entries", table=name, shard=s)
             for s in range(num_shards)]
@@ -298,7 +381,8 @@ class ShardedTable:
             self._reg.histogram("db_shard_op_latency_s", table=name,
                                 shard=s, op="scan")
             for s in range(num_shards)]
-        for inst in ([self._h_ingest, self._h_query, self._h_scan]
+        for inst in ([self._h_ingest, self._h_query, self._h_scan,
+                      self._c_full_scans]
                      + self._c_shard_ingest + self._c_shard_query
                      + self._c_shard_scan + self._h_shard_query
                      + self._h_shard_scan):
@@ -383,9 +467,13 @@ class ShardedTable:
 
     def close(self) -> None:
         """Release buffers and refuse further use (connector delete())."""
+        if self._closed:
+            return
         if self._wal is not None:
             self._wal.close()
             self._wal = None
+        if self.t_store is not None:
+            self.t_store.close()
         self._runs = None
         self.tablets = None
         self._mem_r = self._mem_c = self._mem_v = None
@@ -406,6 +494,8 @@ class ShardedTable:
         else:
             jax.block_until_ready(self._insert(
                 self.tablets, self._mem_r, self._mem_c, self._mem_v))
+        if self.t_store is not None:
+            self.t_store.warmup()
 
     def warm_reads(self) -> None:
         """Precompile the read path's static serving shapes against the
@@ -426,6 +516,8 @@ class ShardedTable:
             probe = np.linspace(0, self.id_capacity - 1,
                                 2 * self.S * 8 + 2).astype(np.int32)
             self.query_rows(np.unique(probe))   # > 8 ids/shard: the tile
+        if self.t_store is not None:  # column selectors serve from A^T
+            self.t_store.warm_reads()
 
     def engine_stats(self) -> dict:
         """Observability: flush/compaction counts and bloom skip rates.
@@ -476,7 +568,12 @@ class ShardedTable:
                _log: bool = True):
         """Host-side BatchWriter: bucket by owner + flat memtable append.
         With a WAL attached, the batch is journaled first (write-ahead);
-        ``_log=False`` is for WAL replay during recovery."""
+        ``_log=False`` is for WAL replay during recovery.
+
+        Transpose-enabled stores dual-ingest: the batch lands in the
+        primary (routed by row) AND the transpose sibling (routed by
+        col, rows/cols swapped) behind ONE pair-tagged WAL record — one
+        fsync, and replay rebuilds both or neither (pair atomicity)."""
         self._check_open()
         rows = np.asarray(rows, np.int32)
         cols = np.asarray(cols, np.int32)
@@ -484,17 +581,22 @@ class ShardedTable:
         n = len(rows)
         if n == 0:
             return
+        if n > self.mem_cap:
+            raise OverflowError(f"batch {n} exceeds memtable {self.mem_cap}")
         t0 = perf_counter()
         with self._trace.span("ingest", table=self.name, n=n):
-            self._insert_batch(rows, cols, vals, _log)
+            if _log and self._wal is not None:
+                self._wal.append(rows, cols, vals,
+                                 pair=self.t_store is not None)
+            self._insert_batch(rows, cols, vals)
+            if self.t_store is not None:
+                self.t_store._insert_batch(cols, rows, vals)
         self._h_ingest.observe(perf_counter() - t0)
 
-    def _insert_batch(self, rows, cols, vals, _log):
+    def _insert_batch(self, rows, cols, vals):
         n = len(rows)
         if n > self.mem_cap:
             raise OverflowError(f"batch {n} exceeds memtable {self.mem_cap}")
-        if _log and self._wal is not None:
-            self._wal.append(rows, cols, vals)
         dest = shard_of(rows, self.S, self.id_capacity)
         order = np.argsort(dest, kind="stable")
         dest, rows, cols, vals = dest[order], rows[order], cols[order], vals[order]
@@ -532,6 +634,11 @@ class ShardedTable:
         compaction when a shard's memtable would overflow. (Not journaled —
         the routed path is the SPMD benchmark path, not the durable one.)"""
         self._check_open()
+        if self.t_store is not None:
+            raise ValueError(
+                "insert_routed() does not maintain the transpose sibling; "
+                "use insert() on a transpose-enabled store (or "
+                "spmd.make_spmd_lsm_pair_ingest_step under shard_map)")
         incoming = np.asarray((np.asarray(br) != I32_MAX).sum(axis=1))
         if (self._mem_n + incoming > self.mem_cap).any():
             self.flush()
@@ -573,6 +680,8 @@ class ShardedTable:
         self._mem_mirror = [[] for _ in range(self.S)]
         self._mirror_ok = True
         self._mem_sorted.clear()
+        if self.t_store is not None:
+            self.t_store.flush()
 
     def _mem_host(self, s: int):
         """Host mirror of shard ``s``'s memtable, or None if stale."""
@@ -610,18 +719,30 @@ class ShardedTable:
             return
         self.flush()
         self._runs.major_compact()
+        if self.t_store is not None:
+            self.t_store.major_compact()
 
     # -------------------------------------------------------------- query
-    def query_rows(self, row_ids: np.ndarray, max_return: int = 256):
+    def query_rows(self, row_ids: np.ndarray, max_return: int = 256,
+                   col_filter: np.ndarray = None):
         """Point queries; returns (row_id, col_id, val) numpy triples.
 
         LSM engine: served from memtable + runs (bloom/fence read path) —
         point reads never trigger a flush. Legacy engine: flushes only when
         a QUERIED shard's memtable is non-empty (read-your-writes without
         the old unconditional global flush).
+
+        ``col_filter`` restricts results to the given column id set; on
+        the fused LSM path the membership test runs ON DEVICE inside the
+        dispatch (no host post-filter), other paths filter on the host.
         """
         self._check_open()
         t_call = perf_counter()
+        host_filter = None
+        if col_filter is not None:
+            col_filter = np.asarray(col_filter, np.int32)
+            if not (self.engine == "lsm" and self.fused_reads):
+                host_filter, col_filter = col_filter, None
         row_ids = np.asarray(row_ids, np.int32)
         owner = shard_of(row_ids, self.S, self.id_capacity)
         out_r, out_c, out_v = [], [], []
@@ -653,7 +774,8 @@ class ShardedTable:
                         continue
                     r, c, v = self._runs.query_shard_fused(
                         int(s), uq, mem_host=fmem, max_return=max_return,
-                        mem_sorted=mem_sorted, q_tile=self.fused_q_limit)
+                        mem_sorted=mem_sorted, q_tile=self.fused_q_limit,
+                        col_filter=col_filter)
                 else:
                     if mh is None and mem_n:  # stale: pull device bufs
                         mem = (self._mem_r[s], self._mem_c[s],
@@ -700,10 +822,16 @@ class ShardedTable:
         if not out_r:
             z = np.zeros(0, np.int32)
             return z, z.copy(), np.zeros(0, np.float32)
-        return (np.concatenate(out_r), np.concatenate(out_c),
-                np.concatenate(out_v))
+        r = np.concatenate(out_r)
+        c = np.concatenate(out_c)
+        v = np.concatenate(out_v)
+        if host_filter is not None:  # non-fused paths: filter on the host
+            keep = np.isin(c, host_filter)
+            r, c, v = r[keep], c[keep], v[keep]
+        return r, c, v
 
-    def scan_range(self, lo: int, hi: int, width: int = 64):
+    def scan_range(self, lo: int, hi: int, width: int = 64,
+                   col_filter: np.ndarray = None):
         """Row-range scan: all (row, col, val) with ``lo <= row < hi``,
         sorted lex by (row, col) per shard — the server-side analogue of an
         Accumulo tablet range scan.
@@ -712,10 +840,19 @@ class ShardedTable:
         fused fence-to-fence dispatch (``scan_shard_fused``) — no id-list
         point expansion. With ``fused_reads`` off the per-shard full scan
         is filtered on the host (the A/B baseline); the legacy single-run
-        engine flushes and slices its sorted run by the endpoint ranks."""
+        engine flushes and slices its sorted run by the endpoint ranks.
+
+        ``col_filter`` restricts results to the given column id set; the
+        fused path masks on-device inside the scan dispatch, other paths
+        filter on the host."""
         self._check_open()
         t_call = perf_counter()
         lo, hi = int(lo), int(hi)
+        host_filter = None
+        if col_filter is not None:
+            col_filter = np.asarray(col_filter, np.int32)
+            if not (self.engine == "lsm" and self.fused_reads):
+                host_filter, col_filter = col_filter, None
         out_r, out_c, out_v = [], [], []
         if hi > lo:
             s_lo = int(shard_of(np.asarray([lo]), self.S, self.id_capacity)[0])
@@ -743,7 +880,7 @@ class ShardedTable:
                                     self._mem_v[s, :mem_n])
                         r, c, v = self._runs.scan_shard_fused(
                             int(s), lo, hi, mem_host=fmem, width=width,
-                            mem_sorted=mem_sorted)
+                            mem_sorted=mem_sorted, col_filter=col_filter)
                     else:  # baseline: full shard scan + host range filter
                         r, c, v = self.scan_shard(s)
                         keep = (r >= lo) & (r < hi)
@@ -766,8 +903,42 @@ class ShardedTable:
         if not out_r:
             z = np.zeros(0, np.int32)
             return z, z.copy(), np.zeros(0, np.float32)
-        return (np.concatenate(out_r), np.concatenate(out_c),
-                np.concatenate(out_v))
+        r = np.concatenate(out_r)
+        c = np.concatenate(out_c)
+        v = np.concatenate(out_v)
+        if host_filter is not None:  # non-fused paths: filter on the host
+            keep = np.isin(c, host_filter)
+            r, c, v = r[keep], c[keep], v[keep]
+        return r, c, v
+
+    # ------------------------------------------------ column-axis reads
+    def query_cols(self, col_ids: np.ndarray, max_return: int = 256):
+        """Point COLUMN queries via the transpose sibling: all
+        (row, col, val) whose col is in ``col_ids`` — same bloom/fence
+        fused path a row query gets, axes swapped back on return."""
+        self._check_open()
+        if self.t_store is None:
+            raise ValueError(
+                f"table {self.name!r} has no transpose sibling "
+                "(ShardedTable(transpose=True))")
+        tr, tc, tv = self.t_store.query_rows(col_ids, max_return=max_return)
+        return tc, tr, tv  # sibling rows ARE our cols (and vice versa)
+
+    def scan_col_range(self, lo: int, hi: int, width: int = 64,
+                       row_filter: np.ndarray = None):
+        """Column-range scan ``lo <= col < hi`` via the transpose
+        sibling's fused fence-to-fence scan — O(selectivity), not the
+        O(nnz) full-scan-and-filter a plain table needs. Returns
+        (rows, cols, vals) sorted lex by (col, row); ``row_filter``
+        pushes a residual row id set into the sibling's dispatch."""
+        self._check_open()
+        if self.t_store is None:
+            raise ValueError(
+                f"table {self.name!r} has no transpose sibling "
+                "(ShardedTable(transpose=True))")
+        tr, tc, tv = self.t_store.scan_range(lo, hi, width=width,
+                                             col_filter=row_filter)
+        return tc, tr, tv  # sibling rows ARE our cols (and vice versa)
 
     def scan_shard(self, s: int):
         """One shard's combined sorted triples (LSM; no flush)."""
@@ -785,6 +956,7 @@ class ShardedTable:
     def scan(self):
         """Full-table scan -> (row_ids, col_ids, vals), sorted per shard."""
         self._check_open()
+        self._c_full_scans.inc()
         if self.engine == "lsm":
             parts = [self.scan_shard(s) for s in range(self.S)]
             return (np.concatenate([p[0] for p in parts]),

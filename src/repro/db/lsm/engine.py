@@ -290,7 +290,7 @@ def _probe_stack(rows, cols, vals, fences, q, max_return: int, block: int,
 def _fused_query_fn(combiner: str, level_blocks: Tuple[int, ...],
                     level_hashes: Tuple[int, ...], b0: int, h0: int,
                     max_return: int, mem_mode: str, pack: bool,
-                    use_pallas: bool):
+                    use_pallas: bool, has_filter: bool = False):
     """Build THE single-dispatch query: the resident leveled runs (deepest
     first), the used L0 slots, and (optionally) the memtable tail of one
     shard are searched and cross-run combined inside one ``jax.jit``.
@@ -322,6 +322,12 @@ def _fused_query_fn(combiner: str, level_blocks: Tuple[int, ...],
     query tiling, a tile whose key range lands outside a run costs only
     the bloom probes.
 
+    With ``has_filter`` the dispatch takes an extra sorted int32 column
+    id set (padded with I32_MAX) and drops candidates outside it ON
+    DEVICE (sorted-membership via ``searchsorted``) before the combine —
+    the residual ``isin(cols)`` of a row-driven read never reaches the
+    host.
+
     Returns (cols[Q, W], vals[Q, W], keep[Q, W], cnt_max, hits[L+K0])
     with W = n_runs * max_return; ``cnt_max`` > max_return signals the
     host to re-dispatch wider (batch-scanner semantics), and ``hits``
@@ -331,7 +337,7 @@ def _fused_query_fn(combiner: str, level_blocks: Tuple[int, ...],
 
     n_levels = len(level_blocks)
 
-    def fused(q, levels, l0, mem):
+    def fused(q, levels, l0, mem, filt=None):
         seg_cols, seg_vals, seg_ok, seg_age, cnts, hits = [], [], [], [], [], []
         n_q = q.shape[0]
         iota = jnp.arange(max_return, dtype=jnp.int32)
@@ -405,6 +411,12 @@ def _fused_query_fn(combiner: str, level_blocks: Tuple[int, ...],
         cols_all = jnp.concatenate(seg_cols, axis=1)              # [Q, W]
         vals_all = jnp.concatenate(seg_vals, axis=1)
         ok_all = jnp.concatenate(seg_ok, axis=1)
+        if has_filter:
+            # residual column filter, on-device: sorted membership test
+            # (filt pads with I32_MAX, which never equals a valid col)
+            pos = jnp.clip(jnp.searchsorted(filt, cols_all), 0,
+                           filt.shape[0] - 1)
+            ok_all = ok_all & (filt[pos] == cols_all)
         ages = jnp.concatenate(
             [jnp.full((n_q, max_return), a, jnp.int32) for a in seg_age],
             axis=1)
@@ -444,7 +456,7 @@ def _fused_query_fn(combiner: str, level_blocks: Tuple[int, ...],
 @functools.lru_cache(maxsize=None)
 def _fused_scan_fn(combiner: str, level_blocks: Tuple[int, ...], b0: int,
                    width: int, mem_mode: str, id_capacity: int,
-                   use_pallas: bool):
+                   use_pallas: bool, has_filter: bool = False):
     """Build THE single-dispatch range scan: a ``[lo, hi)`` row-range over
     one shard's resident leveled runs (deepest first), used L0 slots, and
     (optionally) memtable tail, answered inside one ``jax.jit``.
@@ -470,6 +482,11 @@ def _fused_scan_fn(combiner: str, level_blocks: Tuple[int, ...], b0: int,
       sorts instead of one ~10x-slower comparator sort;
     * else: a 3-key comparator sort (correctness fallback).
 
+    With ``has_filter`` the dispatch takes an extra sorted int32 column
+    id set (padded with I32_MAX) and masks candidates outside it before
+    the merge-dedup — a range scan with a residual ``isin(cols)`` filter
+    stays one dispatch with zero host post-filtering.
+
     Returns (rows[W], cols[W], vals[W], keep[W], cnt_max) with
     W = n_runs * width; kept entries are the combined triples sorted lex
     by (row, col).
@@ -478,7 +495,7 @@ def _fused_scan_fn(combiner: str, level_blocks: Tuple[int, ...], b0: int,
 
     n_levels = len(level_blocks)
 
-    def fused(lohi, levels, l0, mem):
+    def fused(lohi, levels, l0, mem, filt=None):
         iota = jnp.arange(width, dtype=jnp.int32)
         seg_r, seg_c, seg_v, seg_ok, seg_age, cnts = [], [], [], [], [], []
 
@@ -547,6 +564,12 @@ def _fused_scan_fn(combiner: str, level_blocks: Tuple[int, ...], b0: int,
         cols_all = jnp.concatenate(seg_c)
         vals_all = jnp.concatenate(seg_v)
         ok_all = jnp.concatenate(seg_ok)
+        if has_filter:
+            # residual column filter, on-device: sorted membership test
+            # (filt pads with I32_MAX, which never equals a valid col)
+            pos = jnp.clip(jnp.searchsorted(filt, cols_all), 0,
+                           filt.shape[0] - 1)
+            ok_all = ok_all & (filt[pos] == cols_all)
         ages = jnp.concatenate([jnp.full((width,), a, jnp.int32)
                                 for a in seg_age])
         abits = (len(seg_age) + 1).bit_length()
@@ -963,7 +986,8 @@ class LSMRuns:
                           mem_host: Optional[Tuple] = None,
                           max_return: int = 256,
                           mem_sorted: bool = False,
-                          q_tile: Optional[int] = None):
+                          q_tile: Optional[int] = None,
+                          col_filter: Optional[np.ndarray] = None):
         """Point row queries for one shard, fused: each dispatch searches
         the resident leveled runs, the used L0 slots, and the memtable
         tail and age-order combines on-device. ``q`` must be sorted unique
@@ -985,8 +1009,22 @@ class LSMRuns:
         so a tile whose keys all miss a run's filter skips that run's
         search entirely. Tiles are contiguous slices of the sorted ``q``,
         so concatenating per-tile results preserves global row order.
-        ``q_tile=None`` keeps the legacy bucket-by-batch-size shapes."""
+        ``q_tile=None`` keeps the legacy bucket-by-batch-size shapes.
+
+        ``col_filter`` (optional int32 id set) pushes the residual
+        column ``isin`` of a row-driven read into the dispatch as an
+        on-device sorted-membership mask — no host post-filter."""
         n_q = len(q)
+        filt_dev = None
+        has_filter = col_filter is not None
+        if has_filter:
+            cf = np.unique(np.asarray(col_filter, np.int32))
+            if len(cf) == 0:  # empty filter: nothing can match
+                z = np.zeros(0, np.int32)
+                return z, z.copy(), np.zeros(0, np.float32)
+            cf_pad = np.full(_bucket(len(cf)), I32_MAX, np.int32)
+            cf_pad[:len(cf)] = cf
+            filt_dev = jnp.asarray(cf_pad)
         mem, mem_mode = _prep_mem(mem_host, mem_sorted)
         levels, blocks, hashes, live, l0 = self._fused_views(s)
         n_runs = len(levels) + int(l0[0].shape[0]) + (mem_mode != "none")
@@ -1003,7 +1041,7 @@ class LSMRuns:
             self._ctr["fused_tiles"].inc(n_tiles)
         fn = _fused_query_fn(self.combiner, blocks, hashes, self._b0,
                              self._h0, r_ret, mem_mode, pack,
-                             self.use_pallas)
+                             self.use_pallas, has_filter)
         tr = self._trace
         out_r, out_c, out_v = [], [], []
         hit_any = None
@@ -1016,7 +1054,7 @@ class LSMRuns:
                 q_pad[:nb] = q_blk
                 self._ctr["fused_dispatches"].inc()
                 with tr.span("dispatch", tile=t):
-                    out = fn(q_pad, levels, l0, mem)
+                    out = fn(q_pad, levels, l0, mem, filt_dev)
                 with tr.span("host_sync"):
                     cols_s, vals_s, keep, cnt_max, hits = \
                         tuple(np.asarray(x) for x in out)
@@ -1028,8 +1066,8 @@ class LSMRuns:
                                               hashes, self._b0, self._h0,
                                               _bucket(int(cnt_max)),
                                               mem_mode, pack,
-                                              self.use_pallas)
-                        out = wfn(q_pad, levels, l0, mem)
+                                              self.use_pallas, has_filter)
+                        out = wfn(q_pad, levels, l0, mem, filt_dev)
                         cols_s, vals_s, keep, cnt_max, hits = \
                             tuple(np.asarray(x) for x in out)
                 qi, ki = np.nonzero(keep[:nb])
@@ -1051,7 +1089,8 @@ class LSMRuns:
 
     def scan_shard_fused(self, s: int, lo: int, hi: int,
                          mem_host: Optional[Tuple] = None,
-                         width: int = 64, mem_sorted: bool = False):
+                         width: int = 64, mem_sorted: bool = False,
+                         col_filter: Optional[np.ndarray] = None):
         """Row-range scan ``[lo, hi)`` of one shard in ONE jitted dispatch
         + ONE host sync: every resident leveled run, used L0 slot, and the
         memtable tail is fence-bracketed at both endpoints and the
@@ -1060,10 +1099,22 @@ class LSMRuns:
         id-list point expansion). ``width`` is the initial per-run window;
         a run whose range slice overflows it triggers ONE widen retry at
         the next pow2 ≥ the true max slice. Returns combined
-        (rows, cols, vals) sorted lex by (row, col). NO flush happens."""
+        (rows, cols, vals) sorted lex by (row, col). NO flush happens.
+
+        ``col_filter`` (optional int32 id set) masks columns outside the
+        set on-device before the merge-dedup (residual ``isin``)."""
         lo, hi = int(lo), int(hi)
         empty = (np.zeros(0, np.int32), np.zeros(0, np.int32),
                  np.zeros(0, np.float32))
+        filt_dev = None
+        has_filter = col_filter is not None
+        if has_filter:
+            cf = np.unique(np.asarray(col_filter, np.int32))
+            if len(cf) == 0:  # empty filter: nothing can match
+                return empty
+            cf_pad = np.full(_bucket(len(cf)), I32_MAX, np.int32)
+            cf_pad[:len(cf)] = cf
+            filt_dev = jnp.asarray(cf_pad)
         mem, mem_mode = _prep_mem(mem_host, mem_sorted)
         if hi <= lo:
             return empty
@@ -1089,12 +1140,12 @@ class LSMRuns:
         lohi = jnp.asarray(np.asarray([lo, hi], np.int32))
         w = _bucket(width, lo=16)
         fn = _fused_scan_fn(self.combiner, blocks, self._b0, w, mem_mode,
-                            self.id_capacity, self.use_pallas)
+                            self.id_capacity, self.use_pallas, has_filter)
         tr = self._trace
         self._ctr["scan_dispatches"].inc()
         with tr.span("scan.fused", table=self.name, shard=s, lo=lo, hi=hi):
             with tr.span("dispatch"):
-                out = fn(lohi, levels, l0, mem)
+                out = fn(lohi, levels, l0, mem, filt_dev)
             with tr.span("host_sync"):
                 rows_s, cols_s, vals_s, keep, cnt_max = \
                     tuple(np.asarray(x) for x in out)
@@ -1104,8 +1155,9 @@ class LSMRuns:
                 with tr.span("widen_retry", width=int(cnt_max)):
                     fn = _fused_scan_fn(self.combiner, blocks, self._b0,
                                         _bucket(int(cnt_max)), mem_mode,
-                                        self.id_capacity, self.use_pallas)
-                    out = fn(lohi, levels, l0, mem)
+                                        self.id_capacity, self.use_pallas,
+                                        has_filter)
+                    out = fn(lohi, levels, l0, mem, filt_dev)
                     rows_s, cols_s, vals_s, keep, _ = \
                         tuple(np.asarray(x) for x in out)
         ki = np.flatnonzero(keep)

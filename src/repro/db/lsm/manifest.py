@@ -30,9 +30,9 @@ MANIFEST = "MANIFEST.json"
 SNAPSHOT = "snapshot.npz"
 WAL_FILE = "wal.log"
 
-_CONFIG_KEYS = ("num_shards", "capacity_per_shard", "batch_cap",
-                "id_capacity", "combiner", "use_pallas", "mem_cap",
-                "l0_slots", "fanout")
+# transpose-sibling state arrays share the snapshot under this prefix —
+# one atomic npz replace covers BOTH tables of a pair
+_T_PREFIX = "t_"
 
 
 def wal_path(dirpath: str) -> str:
@@ -46,30 +46,34 @@ def write_snapshot(table, dirpath: str) -> str:
     the manifest's ``wal_offset`` then covers everything in the snapshot, so
     recovery replays exactly the post-snapshot suffix.
     """
+    import dataclasses
+
     os.makedirs(dirpath, exist_ok=True)
     runs = table._runs  # LSM engine only
+    state = dict(runs.state_arrays())
+    if table.t_store is not None:  # pair: sibling rides in the same npz
+        for k, v in table.t_store._runs.state_arrays().items():
+            state[_T_PREFIX + k] = v
     snap_tmp = os.path.join(dirpath, SNAPSHOT + ".tmp")
     with open(snap_tmp, "wb") as f:
-        np.savez(f, **runs.state_arrays())
+        np.savez(f, **state)
         f.flush()
         os.fsync(f.fileno())
     os.replace(snap_tmp, os.path.join(dirpath, SNAPSHOT))
+    # the StoreConfig round-trips verbatim (recover() rebuilds from it via
+    # StoreConfig.from_manifest — no hand-listed field relay); per-table
+    # extras (combiner, resolved mem_cap, bloom sizing) ride alongside
+    config = dataclasses.asdict(table.config)
+    config.update({
+        "combiner": table.combiner,
+        "mem_cap": table.mem_cap,
+        "bloom_bits_per_key": list(runs.bloom_bits),
+        "bloom_hashes": list(runs.bloom_hashes),
+    })
     man = {
-        "format": 1,
+        "format": 2,
         "name": table.name,
-        "config": {
-            "num_shards": table.S,
-            "capacity_per_shard": table.cap,
-            "batch_cap": table.batch_cap,
-            "id_capacity": table.id_capacity,
-            "combiner": table.combiner,
-            "use_pallas": table.use_pallas,
-            "mem_cap": table.mem_cap,
-            "l0_slots": runs.K0,
-            "fanout": runs.fanout,
-            "bloom_bits_per_key": list(runs.bloom_bits),
-            "bloom_hashes": list(runs.bloom_hashes),
-        },
+        "config": config,
         "snapshot": SNAPSHOT,
         "wal": WAL_FILE,
         "wal_offset": table._wal.tell() if table._wal else 0,
@@ -91,7 +95,7 @@ def recover(dirpath: str):
     config via the WAL-only path; with a manifest, snapshot runs load
     directly and only the WAL suffix replays.
     """
-    from ..kvstore import ShardedTable
+    from ..kvstore import ShardedTable, StoreConfig
     from .wal import WriteAheadLog
 
     man_path = os.path.join(dirpath, MANIFEST)
@@ -104,18 +108,21 @@ def recover(dirpath: str):
     cfg = man["config"]
     table = ShardedTable(
         man.get("name", "recovered"), engine="lsm",
-        num_shards=cfg["num_shards"],
-        capacity_per_shard=cfg["capacity_per_shard"],
-        batch_cap=cfg["batch_cap"], id_capacity=cfg["id_capacity"],
-        combiner=cfg["combiner"], use_pallas=cfg["use_pallas"],
-        memtable_cap=cfg["mem_cap"], l0_slots=cfg["l0_slots"],
-        fanout=cfg["fanout"],
+        combiner=cfg["combiner"],
         bloom_bits_per_key=tuple(cfg.get("bloom_bits_per_key", ())) or None,
-        bloom_hashes=tuple(cfg.get("bloom_hashes", ())) or None)
+        bloom_hashes=tuple(cfg.get("bloom_hashes", ())) or None,
+        config=StoreConfig.from_manifest(cfg).replace(engine="lsm"))
     snap = os.path.join(dirpath, man["snapshot"])
     if os.path.exists(snap):
         with np.load(snap) as z:
-            table._runs.load_state({k: z[k] for k in z.files})
+            main_state = {k: z[k] for k in z.files
+                          if not k.startswith(_T_PREFIX)}
+            table._runs.load_state(main_state)
+            if table.t_store is not None:
+                t_state = {k[len(_T_PREFIX):]: z[k] for k in z.files
+                           if k.startswith(_T_PREFIX)}
+                if t_state:
+                    table.t_store._runs.load_state(t_state)
     # replay the post-snapshot WAL suffix (torn tail drops at CRC check)
     wal_file = os.path.join(dirpath, man["wal"])
     for rows, cols, vals in WriteAheadLog.replay(

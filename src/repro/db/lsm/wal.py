@@ -7,9 +7,16 @@ triples; string-dictionary durability is a separate concern (ROADMAP).
 
 Record format (little-endian), one record per ``append``::
 
-    u32 n        number of triples
+    u32 n        number of triples (bit 31 = pair-ingest flag)
     u32 crc      crc32 of the payload
     payload      n * int32 rows | n * int32 cols | n * float32 vals
+
+The high bit of ``n`` tags a *pair-ingest* frame: the batch also feeds the
+table's transpose sibling (``A^T`` derives deterministically by swapping
+rows/cols, so the payload is logged ONCE — one record, one fsync, and
+replay can never rebuild half a pair). Readers written before the flag
+treat tagged logs as corrupt rather than misparsing them, and untagged
+logs replay identically under the new reader.
 
 Replay stops at the first torn or corrupt record (crash-consistent: a
 partially flushed tail is discarded, never misparsed). ``tell()`` exposes
@@ -30,6 +37,8 @@ from ...obs import default_registry, default_tracer
 
 _HEADER = b"RLSMWAL1"
 _REC = struct.Struct("<II")
+_PAIR_FLAG = 0x80000000  # high bit of the n field: dual-ingest frame
+_N_MASK = _PAIR_FLAG - 1
 
 Batch = Tuple[np.ndarray, np.ndarray, np.ndarray]
 
@@ -62,15 +71,20 @@ class WriteAheadLog:
 
     # ------------------------------------------------------------ writing
     def append(self, rows: np.ndarray, cols: np.ndarray,
-               vals: np.ndarray) -> int:
-        """Log one batch; returns the byte offset AFTER the record."""
+               vals: np.ndarray, pair: bool = False) -> int:
+        """Log one batch; returns the byte offset AFTER the record.
+
+        ``pair=True`` tags the frame as a dual-ingest batch: recovery
+        re-derives the transpose sibling's triples from the same payload,
+        so both tables of a pair commit or vanish together."""
         t0 = perf_counter()
         with self._trace.span("wal.append", log=_wal_label(self.path),
                               n=len(rows)):
             payload = (np.asarray(rows, "<i4").tobytes()
                        + np.asarray(cols, "<i4").tobytes()
                        + np.asarray(vals, "<f4").tobytes())
-            self._f.write(_REC.pack(len(rows), zlib.crc32(payload)))
+            n_field = len(rows) | (_PAIR_FLAG if pair else 0)
+            self._f.write(_REC.pack(n_field, zlib.crc32(payload)))
             self._f.write(payload)
             self._f.flush()
             if self.sync:
@@ -104,6 +118,7 @@ class WriteAheadLog:
                 if len(head) < _REC.size:
                     return end
                 n, crc = _REC.unpack(head)
+                n &= _N_MASK
                 payload = f.read(12 * n)
                 if len(payload) < 12 * n or zlib.crc32(payload) != crc:
                     return end
@@ -124,8 +139,13 @@ class WriteAheadLog:
         return end
 
     @staticmethod
-    def replay(path: str, start: int = 0) -> Iterator[Batch]:
+    def replay(path: str, start: int = 0, tagged: bool = False) -> Iterator:
         """Yield logged batches from byte offset ``start`` (0 = whole log).
+
+        Yields ``(rows, cols, vals)`` triples; with ``tagged=True`` each
+        item is ``(rows, cols, vals, pair)`` where ``pair`` reports the
+        dual-ingest frame flag (pair-aware recovery re-derives ``A^T``
+        from the same payload).
 
         Tolerates a torn tail: a record whose header or payload is short,
         or whose CRC mismatches, ends the iteration (simulated crash).
@@ -148,6 +168,8 @@ class WriteAheadLog:
                 if len(head) < _REC.size:
                     break
                 n, crc = _REC.unpack(head)
+                pair = bool(n & _PAIR_FLAG)
+                n &= _N_MASK
                 payload = f.read(12 * n)
                 if len(payload) < 12 * n or zlib.crc32(payload) != crc:
                     break  # torn/corrupt tail
@@ -156,5 +178,8 @@ class WriteAheadLog:
                 vals = np.frombuffer(payload[8 * n:], "<f4")
                 c_batches.inc()
                 c_bytes.inc(_REC.size + len(payload))
-                yield rows, cols, vals
+                if tagged:
+                    yield rows, cols, vals, pair
+                else:
+                    yield rows, cols, vals
         h_replay.observe(perf_counter() - t0)

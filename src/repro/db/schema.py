@@ -38,7 +38,7 @@ class DegreeTable:
                                     use_pallas=False)
 
     def degrees(self, vertices) -> Assoc:
-        ids = self.server.resolve_selector(vertices)
+        ids = self.server.resolve_selector_plan(vertices).filter_ids()
         if ids is None:
             ids = np.arange(len(self.server.keydict), dtype=np.int32)
         out = np.asarray(self.out_deg)[ids]

@@ -186,6 +186,62 @@ def make_spmd_lsm_ingest_step(mesh, axis: str, num_shards: int,
     return _instrumented(jax.jit(fn), "spmd_lsm_ingest")
 
 
+def make_spmd_lsm_pair_ingest_step(mesh, axis: str, num_shards: int,
+                                   id_capacity: int,
+                                   combiner: str = "last"):
+    """Dual-ingest step for an engine-maintained transpose pair: ONE jit
+    routes the batch twice — forward triples by row owner into ``A``'s L0
+    stack, swapped triples by col owner into ``A^T``'s — so both sides of
+    the pair advance in the same dispatch (the mesh analogue of the local
+    engine's pair-tagged WAL frame: one step, both siblings, or neither).
+
+    Same full-stack contract as ``make_spmd_lsm_ingest_step``: when either
+    stack's ``k`` hits ``slots``, compact BOTH (each via
+    ``make_spmd_lsm_compact_step``) and re-submit the batch.
+    """
+    from .kvstore import _dedup_combine
+
+    def routed_run(br, bc, bv):
+        """all_to_all by row owner, then sort+dedup into one L0 run."""
+        send = _bucket_local(br, bc, bv, num_shards, id_capacity)
+        rr = jax.lax.all_to_all(send[0], axis, 0, 0).reshape(-1)
+        rc = jax.lax.all_to_all(send[1], axis, 0, 0).reshape(-1)
+        rv = jax.lax.all_to_all(send[2], axis, 0, 0).reshape(-1)
+        order = jnp.lexsort((rc, rr))
+        sr, sc, sv = rr[order], rc[order], rv[order]
+        keep, out_v = _dedup_combine(sr, sc, sv, combiner)
+        cap = sr.shape[0]
+        pos = jnp.cumsum(keep) - 1
+        idx = jnp.where(keep, pos, cap)
+        return (jnp.full((cap,), I32_MAX, jnp.int32).at[idx].set(sr, mode="drop"),
+                jnp.full((cap,), I32_MAX, jnp.int32).at[idx].set(sc, mode="drop"),
+                jnp.zeros((cap,), jnp.float32).at[idx].set(out_v, mode="drop"))
+
+    def append(me: L0Stack, run) -> L0Stack:
+        slots = me.rows.shape[0]
+        return L0Stack(rows=me.rows.at[me.k].set(run[0], mode="drop"),
+                       cols=me.cols.at[me.k].set(run[1], mode="drop"),
+                       vals=me.vals.at[me.k].set(run[2], mode="drop"),
+                       k=jnp.minimum(me.k + 1, slots))
+
+    def shard_fn(l0: L0Stack, l0t: L0Stack, br, bc, bv):
+        me = jax.tree.map(lambda x: x[0], l0)
+        met = jax.tree.map(lambda x: x[0], l0t)
+        # rows and cols share one id space, so the SAME shard_of routes
+        # both directions; the transpose leg just swaps the key roles
+        fwd = routed_run(br[0], bc[0], bv[0])
+        twd = routed_run(bc[0], br[0], bv[0])
+        return (jax.tree.map(lambda x: x[None], append(me, fwd)),
+                jax.tree.map(lambda x: x[None], append(met, twd)))
+
+    fn = _shard_map(shard_fn, mesh=mesh,
+                    in_specs=(_l0_spec(axis), _l0_spec(axis), P(axis, None),
+                              P(axis, None), P(axis, None)),
+                    out_specs=(_l0_spec(axis), _l0_spec(axis)),
+                    **_SHARD_MAP_KW)
+    return _instrumented(jax.jit(fn), "spmd_lsm_pair_ingest")
+
+
 def make_spmd_lsm_query_step(mesh, axis: str, combiner: str = "last",
                              max_return: int = 64, q_tile: int = None):
     """Fused point reads on the mesh: ONE shard_map'd jit searches each
@@ -281,7 +337,8 @@ def make_spmd_lsm_query_step(mesh, axis: str, combiner: str = "last",
 
 
 def make_spmd_lsm_scan_step(mesh, axis: str, combiner: str = "last",
-                            width: int = 128):
+                            width: int = 128,
+                            transpose_output: bool = False):
     """Fused range scans on the mesh: ONE shard_map'd jit answers a
     ``[lo, hi)`` row-range scan per shard over its level run plus its
     ENTIRE L0 stack, merged-deduped on-device — the distributed analogue
@@ -296,7 +353,13 @@ def make_spmd_lsm_scan_step(mesh, axis: str, combiner: str = "last",
     (rows[S, W], cols[S, W], vals[S, W], keep[S, W], cnt_max[S]) with
     W = (slots + 1) * width, kept entries sorted lex by (row, col);
     ``cnt_max`` > width means some run's slice overflowed the window —
-    re-make the step wider (batch-scanner semantics)."""
+    re-make the step wider (batch-scanner semantics).
+
+    ``transpose_output=True`` serves COLUMN-range scans over a pair's
+    transpose sibling stacks (see ``make_spmd_lsm_pair_ingest_step``):
+    the scan ranks over the sibling's row axis (= ``A``'s columns) and
+    the outputs come back swapped into ``A`` orientation — rows are the
+    sibling's cols and vice versa, kept entries sorted by (col, row)."""
     from .kvstore import _dedup_combine
 
     def window(rows, cols, vals, lohi):
@@ -328,6 +391,8 @@ def make_spmd_lsm_scan_step(mesh, axis: str, combiner: str = "last",
             (row_m, col_m, ages, vals_all), dimension=0, num_keys=3)
         keep, out_v = _dedup_combine(row_s, col_s, val_s, combiner)
         cnt_max = jnp.maximum(jnp.max(n_l0), n_lv)
+        if transpose_output:  # sibling rows ARE A's cols: swap back
+            row_s, col_s = col_s, row_s
         return (row_s[None], col_s[None],
                 jnp.where(keep, out_v, 0.0)[None], keep[None], cnt_max[None])
 

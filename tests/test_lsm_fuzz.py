@@ -116,6 +116,94 @@ def test_wal_truncation_fuzz(tmp_path):
         st._wal.close()
 
 
+def _build_pair_wal_dir(root):
+    """Same shape as ``_build_wal_dir`` but for an engine-maintained
+    transpose PAIR: each ``insert`` writes ONE pair-tagged WAL record and
+    lands in both sibling shard sets."""
+    d = os.path.join(root, "pdb")
+    st = ShardedTable("fzp", num_shards=1, capacity_per_shard=512,
+                      batch_cap=64, id_capacity=1 << 9, combiner="last",
+                      memtable_cap=16, engine="lsm", wal_dir=d,
+                      transpose=True)
+    rng = np.random.default_rng(42)
+    batches = []
+
+    def put():
+        r = rng.choice(1 << 9, BATCH_N, replace=False).astype(np.int32)
+        c = rng.integers(0, 4, BATCH_N).astype(np.int32)
+        v = rng.normal(size=BATCH_N).astype(np.float32)
+        st.insert(r, c, v)
+        batches.append((r, c, v))
+        return st._wal.tell()
+
+    for _ in range(N_PRE):
+        put()
+    st.checkpoint()
+    ckpt_off = st._wal.tell()
+    ends = [put() for _ in range(N_POST)]
+    st._wal.close()  # simulated crash
+    return d, batches, ends, ckpt_off
+
+
+def test_wal_pair_truncation_fuzz(tmp_path):
+    """Pair atomicity under crash: cut the WAL at EVERY byte offset of the
+    tail frame (plus sampled offsets across the file); recovery must
+    restore the forward table to the prefix-consistent oracle AND the
+    transpose sibling to EXACTLY the transpose of the forward table — both
+    sides of each pair-tagged record commit or vanish together, never
+    half. A post-recovery pair write must survive a second crash."""
+    src, batches, ends, ckpt_off = _build_pair_wal_dir(str(tmp_path))
+    wal = os.path.join(src, "wal.log")
+    size = os.path.getsize(wal)
+    tail_start = ends[-2]
+    rng = np.random.default_rng(11)
+    sampled = sorted(set(int(x) for x in
+                         rng.integers(0, tail_start, 8 + FUZZ_BUDGET)))
+    cuts = sampled + list(range(tail_start, size + 1))
+    for i, cut in enumerate(cuts):
+        d = str(tmp_path / f"pcut{cut}")
+        shutil.copytree(src, d)
+        with open(os.path.join(d, "wal.log"), "r+b") as f:
+            f.truncate(cut)
+        st = recover(d)
+        assert st.t_store is not None  # manifest config carries the pair
+        want = _expected_rows(batches, ends, ckpt_off, cut)
+        got = _scan_dict(st)
+        assert got == pytest.approx(want), (cut, sorted(got), sorted(want))
+        sib = _scan_dict(st.t_store)
+        assert sib == pytest.approx(
+            {(b, a): v for (a, b), v in want.items()}), (cut, sorted(sib))
+        if i % 6 == 0:
+            st.insert(np.asarray([500], np.int32), np.asarray([2], np.int32),
+                      np.asarray([9.5], np.float32))
+            st._wal.close()
+            st2 = recover(d)
+            want2 = dict(want)
+            want2[(500, 2)] = 9.5
+            assert _scan_dict(st2) == pytest.approx(want2), cut
+            assert _scan_dict(st2.t_store) == pytest.approx(
+                {(b, a): v for (a, b), v in want2.items()}), cut
+            st2._wal.close()
+        st._wal.close()
+
+
+def test_wal_pair_record_is_single_frame(tmp_path):
+    """One pair ingest = ONE WAL record (payload logged once, transpose
+    derived at replay) — the pair log is byte-for-byte the same size as a
+    single-table log over the same batches, except the flag bit."""
+    from repro.db.lsm.wal import WriteAheadLog
+
+    single, _, _, _ = _build_wal_dir(str(tmp_path))
+    pair, _, _, _ = _build_pair_wal_dir(str(tmp_path))
+    s_wal, p_wal = os.path.join(single, "wal.log"), os.path.join(pair,
+                                                                 "wal.log")
+    assert os.path.getsize(s_wal) == os.path.getsize(p_wal)
+    tags = [p for *_abc, p in WriteAheadLog.replay(p_wal, tagged=True)]
+    assert tags and all(tags)  # every frame carries the pair flag
+    tags_s = [p for *_abc, p in WriteAheadLog.replay(s_wal, tagged=True)]
+    assert tags_s and not any(tags_s)
+
+
 def test_wal_header_corruption_keeps_post_recovery_writes(tmp_path):
     """A crash that tears the WAL HEADER itself must not poison the log:
     recovery keeps the snapshot, re-anchors the manifest offset, lays a

@@ -86,3 +86,99 @@ def test_spmd_ingest_matches_local_driver():
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-3000:]
     assert "SPMD-OK" in out.stdout
+
+
+PAIR_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+from repro.db.spmd import (l0_stacked_empty, make_spmd_lsm_pair_ingest_step,
+                           make_spmd_lsm_scan_step, stacked_empty)
+from repro.db.kvstore import ShardedTable
+from repro.kernels.common import I32_MAX
+
+S, BCAP, IDCAP, SLOTS = 8, 128, 1 << 12, 4
+RUN_CAP = BCAP * S
+mesh = jax.make_mesh((S,), ("data",))
+step = make_spmd_lsm_pair_ingest_step(mesh, "data", S, IDCAP, combiner="sum")
+
+def shard_spec(x):
+    return NamedSharding(mesh, P("data", *([None] * (x.ndim - 1))))
+
+l0 = l0_stacked_empty(S, SLOTS, RUN_CAP)
+l0t = l0_stacked_empty(S, SLOTS, RUN_CAP)
+l0 = jax.device_put(l0, jax.tree.map(shard_spec, l0))
+l0t = jax.device_put(l0t, jax.tree.map(shard_spec, l0t))
+
+# mirror pair via the local engine (oracle): sum combiner makes the
+# cross-ingestor merge order irrelevant
+local = ShardedTable("oracle", num_shards=S, capacity_per_shard=RUN_CAP * 8,
+                     batch_cap=BCAP * S, id_capacity=IDCAP, combiner="sum",
+                     transpose=True)
+
+rng = np.random.default_rng(0)
+sh = NamedSharding(mesh, P("data", None))
+for it in range(3):
+    br = np.full((S, BCAP), I32_MAX, np.int32)
+    bc = np.full((S, BCAP), I32_MAX, np.int32)
+    bv = np.zeros((S, BCAP), np.float32)
+    all_r, all_c, all_v = [], [], []
+    for s in range(S):
+        n = int(rng.integers(40, BCAP))
+        r = rng.integers(0, IDCAP, n).astype(np.int32)
+        c = rng.integers(0, IDCAP, n).astype(np.int32)
+        v = rng.integers(1, 5, n).astype(np.float32)
+        br[s, :n], bc[s, :n], bv[s, :n] = r, c, v
+        all_r.append(r); all_c.append(c); all_v.append(v)
+    l0, l0t = step(l0, l0t,
+                   jax.device_put(jnp.asarray(br), sh),
+                   jax.device_put(jnp.asarray(bc), sh),
+                   jax.device_put(jnp.asarray(bv), sh))
+    local.insert(np.concatenate(all_r), np.concatenate(all_c),
+                 np.concatenate(all_v))
+
+# column-range scan over the TRANSPOSE stacks, outputs swapped back into
+# A orientation — must equal the local engine's transpose-routed read
+LO, HI = 100, 900
+scan = make_spmd_lsm_scan_step(mesh, "data", combiner="sum",
+                               width=RUN_CAP, transpose_output=True)
+level = stacked_empty(S, RUN_CAP)  # no compaction yet: empty level runs
+level = jax.device_put(level, jax.tree.map(shard_spec, level))
+bounds = jnp.broadcast_to(jnp.asarray([LO, HI], jnp.int32), (S, 2))
+rows, cols, vals, keep, cnt = scan(l0t, level,
+                                   jax.device_put(bounds, sh))
+assert int(jnp.max(cnt)) <= RUN_CAP
+rows, cols = np.asarray(rows), np.asarray(cols)
+vals, keep = np.asarray(vals), np.asarray(keep)
+got = {}
+for s in range(S):
+    for r, c, v in zip(rows[s][keep[s]], cols[s][keep[s]],
+                       vals[s][keep[s]]):
+        got[(int(r), int(c))] = got.get((int(r), int(c)), 0.0) + float(v)
+
+lr, lc, lv = local.scan_col_range(LO, HI)
+want = {}
+for r, c, v in zip(lr, lc, lv):
+    want[(int(r), int(c))] = float(v)
+assert set(got) == set(want), (len(got), len(want))
+for k in want:
+    assert abs(got[k] - want[k]) < 1e-3, (k, got[k], want[k])
+print("SPMD-PAIR-OK", len(got))
+"""
+
+
+@pytest.mark.slow
+def test_spmd_pair_ingest_and_transpose_scan_match_local_engine():
+    """Dual-ingest on the mesh + column-range scan via the transpose
+    stacks (``transpose_output=True``) must agree with the local engine's
+    pair store (``scan_col_range``)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", PAIR_SCRIPT], env=env,
+                         cwd=".", capture_output=True, text=True,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SPMD-PAIR-OK" in out.stdout
