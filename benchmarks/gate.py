@@ -24,14 +24,31 @@ committed baseline; any deeper drop exits nonzero. Ratios are used rather
 than absolute latencies so shared-runner noise cancels out (both sides of
 each A/B run on the same machine in the same process).
 
+Tail latencies (p99/p50 amplification per op family) are gated too, once
+a tail baseline is committed at ``--tail-baseline`` (default
+``BENCH_tails.json``). A fresh tail may exceed its baseline by the tail
+threshold OR by the measured noise floor, whichever is larger::
+
+    budget = max(base * (1 + tail_threshold), base + noise_floor[name])
+
+The noise floor comes from ``ingest_bench --repeats N``: each repeat
+interleaves a full (single, lsm) ingest + query-sampling pass, and the
+max-min spread of the per-repeat p99/p50 amplifications is what
+shared-runner jitter alone does to the tail — a regression must clear
+that bar before it reds the gate. Without a committed tail baseline the
+tail table stays advisory (bootstrap mode, as before). Regenerate the
+baseline with ``--write-tail-baseline`` after an intentional tail change.
+
 Usage (CI and local are the same invocation):
 
-  PYTHONPATH=src python -m benchmarks.ingest_bench --smoke --out fresh_ingest.json
+  PYTHONPATH=src python -m benchmarks.ingest_bench --smoke --repeats 5 \
+      --out fresh_ingest.json
   PYTHONPATH=src python -m benchmarks.query_bench --fused-compare --scan-compare \
       --reps 50 --out fresh_query.json
   PYTHONPATH=src python -m benchmarks.gate \
       --baseline-ingest BENCH_ingest.json --baseline-query BENCH_query.json \
-      --new-ingest fresh_ingest.json --new-query fresh_query.json
+      --new-ingest fresh_ingest.json --new-query fresh_query.json \
+      --tail-baseline BENCH_tails.json
 
 A markdown summary table is printed and, when ``$GITHUB_STEP_SUMMARY`` is
 set (CI), appended there too.
@@ -79,11 +96,10 @@ def extract_ratios(ingest: Optional[dict],
 
 def extract_tail_ratios(ingest: Optional[dict],
                         query: Optional[dict]) -> Dict[str, float]:
-    """Advisory tail-latency ratios: p99/p50 amplification per op family.
-    These ride along in the gate summary but NEVER turn the gate red —
-    tail latencies on shared CI runners are too noisy to gate on until a
-    baselined noise floor exists (tracked ratios stay the sole gating
-    mechanism). Higher = fatter tail."""
+    """Tail-latency ratios: p99/p50 amplification per op family. Gated
+    against the committed tail baseline when one exists (see
+    ``compare_tails``), advisory bootstrap otherwise. Higher = fatter
+    tail."""
     out: Dict[str, float] = {}
 
     def amp(hi, lo):
@@ -117,23 +133,91 @@ def extract_tail_ratios(ingest: Optional[dict],
     return out
 
 
+def extract_tail_noise(ingest: Optional[dict]) -> Dict[str, float]:
+    """Per-family tail noise floor (max-min spread of the per-repeat
+    p99/p50 amplification) from an ingest artifact's ``tail_noise``
+    section (written by ``ingest_bench --repeats N``). Families the
+    bench doesn't repeat (query-bench read paths) get no floor and gate
+    on the relative threshold alone."""
+    out: Dict[str, float] = {}
+    for name, rec in ((ingest or {}).get("tail_noise") or {}).items():
+        if isinstance(rec, dict) and "spread" in rec:
+            out[name] = float(rec["spread"])
+    return out
+
+
+def compare_tails(baseline: Dict[str, float], noise_floor: Dict[str, float],
+                  new: Dict[str, float],
+                  threshold: float = 0.5) -> Tuple[List[dict], bool]:
+    """Gated tail compare: one row per p99/p50 family. A tail regresses
+    when the fresh amplification exceeds
+    ``max(base * (1 + threshold), base + noise_floor)`` — the noise floor
+    (measured spread across interleaved bench repeats) keeps runner
+    jitter from redding the gate, the relative threshold catches real
+    tail blowups. One-sided: a SHRINKING tail is always green. Like
+    ``compare``, a baseline-tracked family missing from the fresh run
+    fails closed; a family only the fresh run reports stays advisory."""
+    rows, ok = [], True
+    for name in sorted(set(baseline) | set(new)):
+        b, n = baseline.get(name), new.get(name)
+        if b is None:
+            rows.append({"ratio": name, "baseline": b, "new": n,
+                         "budget": None, "status": "untracked"})
+            continue
+        budget = max(b * (1.0 + threshold), b + noise_floor.get(name, 0.0))
+        if n is None:
+            ok = False
+            rows.append({"ratio": name, "baseline": b, "new": n,
+                         "budget": budget, "status": "MISSING"})
+            continue
+        regressed = n > budget
+        ok = ok and not regressed
+        rows.append({"ratio": name, "baseline": b, "new": n,
+                     "budget": budget,
+                     "status": "REGRESSED" if regressed else "ok"})
+    return rows, ok
+
+
+def _fmt_tail(x) -> str:
+    return "—" if x is None else f"{x:.1f}x"
+
+
 def tail_markdown(baseline: Dict[str, float],
                   new: Dict[str, float]) -> str:
-    """Markdown for the advisory tail table; empty string when neither
-    side carries tail fields (old artifacts)."""
+    """Markdown for the advisory (bootstrap) tail table — used only when
+    no tail baseline is committed yet; empty string when neither side
+    carries tail fields (old artifacts)."""
     names = sorted(set(baseline) | set(new))
     if not names:
         return ""
     lines = ["## Tail latency (advisory)",
-             "p99/p50 amplification per op family; informational only — "
-             "never fails the gate", "",
+             "p99/p50 amplification per op family; no committed "
+             "`BENCH_tails.json` yet, so informational only — commit one "
+             "(`gate --write-tail-baseline`) to arm the tail gate", "",
              "| ratio | baseline | new |",
              "|---|---|---|"]
     for name in names:
-        def fmt(x):
-            return "—" if x is None else f"{x:.1f}x"
-        lines.append(f"| {name} | {fmt(baseline.get(name))} | "
-                     f"{fmt(new.get(name))} |")
+        lines.append(f"| {name} | {_fmt_tail(baseline.get(name))} | "
+                     f"{_fmt_tail(new.get(name))} |")
+    return "\n".join(lines) + "\n"
+
+
+def tail_gate_markdown(rows: List[dict], threshold: float) -> str:
+    """Markdown for the GATED tail table (committed baseline present)."""
+    if not rows:
+        return ""
+    lines = ["## Tail latency gate",
+             f"p99/p50 amplification per op family; fail above "
+             f"max(baseline × {1.0 + threshold:.2f}, baseline + noise "
+             f"floor)", "",
+             "| ratio | baseline | new | budget | status |",
+             "|---|---|---|---|---|"]
+    for r in rows:
+        mark = {"ok": "✅", "REGRESSED": "❌",
+                "MISSING": "❌"}.get(r["status"], "➖")
+        lines.append(f"| {r['ratio']} | {_fmt_tail(r['baseline'])} | "
+                     f"{_fmt_tail(r['new'])} | {_fmt_tail(r['budget'])} | "
+                     f"{mark} {r['status']} |")
     return "\n".join(lines) + "\n"
 
 
@@ -198,16 +282,47 @@ def main(argv=None) -> int:
     ap.add_argument("--new-query", required=True)
     ap.add_argument("--threshold", type=float, default=0.2,
                     help="max allowed relative drop (0.2 = 20%%)")
+    ap.add_argument("--tail-baseline", default="BENCH_tails.json",
+                    help="committed tail baseline (tails + noise floor); "
+                         "absent file = advisory tail table (bootstrap)")
+    ap.add_argument("--tail-threshold", type=float, default=None,
+                    help="max allowed relative tail growth; defaults to "
+                         "the baseline file's threshold, else 0.5")
+    ap.add_argument("--write-tail-baseline", metavar="PATH", default=None,
+                    help="write a fresh tail baseline from the --new "
+                         "artifacts (tails + tail_noise spreads) and exit")
     args = ap.parse_args(argv)
+    new_ingest, new_query = _load(args.new_ingest), _load(args.new_query)
+    new_tails = extract_tail_ratios(new_ingest, new_query)
+    if args.write_tail_baseline:
+        payload = {"threshold": args.tail_threshold
+                   if args.tail_threshold is not None else 0.5,
+                   "tails": new_tails,
+                   "noise_floor": extract_tail_noise(new_ingest)}
+        with open(args.write_tail_baseline, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote tail baseline {args.write_tail_baseline} "
+              f"({len(new_tails)} families)")
+        return 0
     baseline = extract_ratios(_load(args.baseline_ingest),
                               _load(args.baseline_query))
-    new = extract_ratios(_load(args.new_ingest), _load(args.new_query))
+    new = extract_ratios(new_ingest, new_query)
     rows, ok = compare(baseline, new, args.threshold)
     md = markdown(rows, args.threshold)
-    tail_md = tail_markdown(
-        extract_tail_ratios(_load(args.baseline_ingest),
-                            _load(args.baseline_query)),
-        extract_tail_ratios(_load(args.new_ingest), _load(args.new_query)))
+    tail_base = _load(args.tail_baseline)
+    tails_ok = True
+    if tail_base is not None:
+        tail_thr = args.tail_threshold if args.tail_threshold is not None \
+            else float(tail_base.get("threshold", 0.5))
+        t_rows, tails_ok = compare_tails(tail_base.get("tails") or {},
+                                         tail_base.get("noise_floor") or {},
+                                         new_tails, tail_thr)
+        tail_md = tail_gate_markdown(t_rows, tail_thr)
+    else:
+        tail_md = tail_markdown(
+            extract_tail_ratios(_load(args.baseline_ingest),
+                                _load(args.baseline_query)), new_tails)
     if tail_md:
         md = md + "\n" + tail_md
     print(md)
@@ -215,11 +330,16 @@ def main(argv=None) -> int:
     if summary:
         with open(summary, "a") as f:
             f.write(md)
-    if not baseline:
+    if not baseline and tail_base is None:
         print("no committed baselines found — gate is advisory this run")
         return 0
-    if not ok:
-        print("bench gate FAILED: tracked ratio regressed past threshold")
+    failures = []
+    if baseline and not ok:
+        failures.append("tracked ratio regressed past threshold")
+    if tail_base is not None and not tails_ok:
+        failures.append("tail p99/p50 exceeded its SLO budget")
+    if failures:
+        print("bench gate FAILED: " + "; ".join(failures))
         return 1
     print("bench gate OK")
     return 0

@@ -177,7 +177,12 @@ def engine_compare(entries_per_shard: int = 1 << 18, shards: int = 2,
     shared-runner load hits both engines of a repeat pair alike, so the
     ratio the CI bench gate tracks stays stable even when absolute walls
     swing. Per-engine rates report the best wall (one-sided noise
-    filter).
+    filter). The same repeats double as the tail NOISE FLOOR probe: each
+    repeat yields one p99/p50 amplification per (engine, op) family —
+    ingest from that repeat's store histograms, query from a per-round
+    sampling pass — and the max-min spread across repeats lands in
+    ``tail_noise``, which the CI gate uses as the jitter allowance when
+    gating tail ratios (see ``benchmarks.gate.compare_tails``).
 
     A final query-batch sweep (64..4096 ids) times the FIRST call at each
     size — the one-shot serving semantics ``queries_per_s`` has always
@@ -232,17 +237,34 @@ def engine_compare(entries_per_shard: int = 1 << 18, shards: int = 2,
     # ---- phase 2: flush-cost probe + query phase per engine
     reg = default_registry()
     mem_pre_read = {}
+    tail_noise: dict = {}
+
+    def _amp(h):
+        p = h.percentiles()
+        return p["p99"] / p["p50"] if p["p50"] else None
+
     for engine in ("single", "lsm"):
         store = stores[engine]
         ingest_wall = min(walls[engine])
         # per-batch ingest latency percentiles, pooled across every repeat's
         # store (repro.obs histograms populated by ShardedTable.insert
-        # during the timed phase — tail latency beside the throughput rows)
+        # during the timed phase — tail latency beside the throughput rows).
+        # Per-repeat p99/p50 amps feed the tail noise floor.
         h_ing = Histogram(reg, "pooled_ingest", {})
+        ing_amps = []
         for rep in range(max(repeats, 1)):
+            h_rep = Histogram(reg, "rep_ingest", {})
             for h in reg.series("db_op_latency_s",
                                 table=f"cmp_{engine}_{rep}", op="ingest"):
-                h_ing.merge(h)
+                h_rep.merge(h)
+            h_ing.merge(h_rep)
+            a = _amp(h_rep)
+            if a:
+                ing_amps.append(a)
+        if ing_amps:
+            tail_noise[f"{engine}_ingest_p99_over_p50"] = {
+                "repeats": ing_amps,
+                "spread": max(ing_amps) - min(ing_amps)}
         # explicit flush-cost probe at FULL table size: the single-run
         # engine pays O(capacity) to absorb one memtable, the LSM engine
         # O(memtable) — the core scaling claim, measured directly
@@ -265,14 +287,27 @@ def engine_compare(entries_per_shard: int = 1 << 18, shards: int = 2,
         store.warm_reads()
         # per-call query latency sampling: repeated SMALL batches (the
         # tracked queries_per_s protocol lives in the sweep below and
-        # stays one-shot) so p50/p99 reflect per-dispatch read latency
+        # stays one-shot) so p50/p99 reflect per-dispatch read latency.
+        # One sampling round per repeat: reported percentiles pool every
+        # round, per-round amps feed the tail noise floor.
         qb = 16
         store.query_rows(q[:qb])  # warm the small-batch jit off the clock
-        store._h_query.reset()
-        for i in range(64):
-            j = (i * qb) % max(n_queries - qb, 1)
-            store.query_rows(q[j:j + qb])
-        lat_q = store._h_query.percentiles()
+        h_q = Histogram(reg, "pooled_query", {})
+        q_amps = []
+        for _rnd in range(max(repeats, 1)):
+            store._h_query.reset()
+            for i in range(64):
+                j = (i * qb) % max(n_queries - qb, 1)
+                store.query_rows(q[j:j + qb])
+            h_q.merge(store._h_query)
+            a = _amp(store._h_query)
+            if a:
+                q_amps.append(a)
+        if q_amps:
+            tail_noise[f"{engine}_query_p99_over_p50"] = {
+                "repeats": q_amps,
+                "spread": max(q_amps) - min(q_amps)}
+        lat_q = h_q.percentiles()
         mem_pre_read[engine] = store._mem_n.copy()
         out["engines"][engine] = {
             "ingest_wall_s": ingest_wall,
@@ -350,6 +385,7 @@ def engine_compare(entries_per_shard: int = 1 << 18, shards: int = 2,
             (stores[engine]._mem_n != mem_pre_read[engine]).any())
         out["engines"][engine]["stats"] = stores[engine].engine_stats()
     out["query_sweep"] = sweep
+    out["tail_noise"] = tail_noise
     # worst-case first-call ratio across the sweep: the gate metric — LSM
     # reads must beat the legacy engine at EVERY batch size it serves
     out["lsm_query_speedup"] = min(r["lsm_vs_single"] for r in sweep)
@@ -453,6 +489,10 @@ def main() -> None:
     ap.add_argument("--metrics-out", default=None,
                     help="also dump the full repro.obs registry snapshot "
                          "(counters + latency histograms) as JSON")
+    ap.add_argument("--bundle-out", default=None,
+                    help="also write a debug bundle (zip: metrics + "
+                         "Prometheus text + slow traces/flight recordings "
+                         "+ bench result) — the CI diagnostic artifact")
     args = ap.parse_args()
     if args.smoke or args.compare:
         eps = args.entries_per_shard or (1 << 14 if args.smoke else 1 << 18)
@@ -469,6 +509,11 @@ def main() -> None:
         if args.metrics_out:
             default_registry().dump(args.metrics_out)
             print(f"wrote {args.metrics_out}")
+        if args.bundle_out:
+            from repro.obs.export import write_debug_bundle
+            write_debug_bundle(args.bundle_out,
+                               extra={"bench_result": result})
+            print(f"wrote {args.bundle_out}")
         return
     fig3()
     batch_sweep()

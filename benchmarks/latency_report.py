@@ -4,7 +4,11 @@ Reads ``BENCH_ingest.json`` / ``BENCH_query.json`` (or fresh CI copies)
 plus an optional registry dump (``--metrics``, written by
 ``ingest_bench --metrics-out``) and prints a markdown latency table —
 appended to ``$GITHUB_STEP_SUMMARY`` when set, so every CI run shows the
-tail-latency trajectory next to the bench gate without gating on it.
+tail-latency trajectory next to the bench gate. When the committed tail
+baseline (``--tails``, default ``BENCH_tails.json``) exists, a tail
+SLO-burn table rides along: per op family, how much of the headroom
+between the committed baseline and the gate's red line this run burned
+(the gate itself lives in ``benchmarks.gate``; this is the dashboard).
 
   PYTHONPATH=src python -m benchmarks.latency_report \
       --ingest fresh_ingest.json --query fresh_query.json \
@@ -88,6 +92,52 @@ def metrics_rows(metrics: Optional[dict]) -> List[dict]:
     return rows
 
 
+def slo_burn_rows(tail_base: Optional[dict], ingest: Optional[dict],
+                  query: Optional[dict]) -> List[dict]:
+    """SLO-burn per tail family: how much of the budget headroom between
+    the committed baseline and the gate's red line
+    (``max(base*(1+thr), base+noise)``) this run consumed. 0% = at or
+    below baseline, 100% = exactly at the red line, >100% = the gate
+    job goes red on the same numbers."""
+    if not tail_base:
+        return []
+    from benchmarks.gate import compare_tails, extract_tail_ratios
+    thr = float(tail_base.get("threshold", 0.5))
+    rows, _ok = compare_tails(tail_base.get("tails") or {},
+                              tail_base.get("noise_floor") or {},
+                              extract_tail_ratios(ingest, query), thr)
+    out = []
+    for r in rows:
+        if r["baseline"] is None or r["new"] is None:
+            continue
+        headroom = r["budget"] - r["baseline"]
+        burn = (r["new"] - r["baseline"]) / headroom if headroom > 0 \
+            else float("inf")
+        out.append({"ratio": r["ratio"], "baseline": r["baseline"],
+                    "new": r["new"], "budget": r["budget"],
+                    "burn_pct": max(0.0, burn * 100.0),
+                    "status": r["status"]})
+    return out
+
+
+def slo_markdown(rows: List[dict]) -> str:
+    if not rows:
+        return ""
+    lines = ["## Tail SLO burn", "",
+             "budget = max(baseline × (1+threshold), baseline + noise "
+             "floor); burn 100% = at the gate's red line", "",
+             "| ratio | baseline | new | budget | burn | status |",
+             "|---|---|---|---|---|---|"]
+    for r in rows:
+        mark = "🔥" if r["status"] == "REGRESSED" else \
+            ("⚠️" if r["burn_pct"] > 50 else "✅")
+        lines.append(
+            f"| {r['ratio']} | {r['baseline']:.1f}x | {r['new']:.1f}x | "
+            f"{r['budget']:.1f}x | {r['burn_pct']:.0f}% | "
+            f"{mark} {r['status']} |")
+    return "\n".join(lines) + "\n"
+
+
 def markdown(rows: List[dict], title: str) -> str:
     if not rows:
         return ""
@@ -106,12 +156,16 @@ def main(argv=None) -> int:
     ap.add_argument("--query", default="BENCH_query.json")
     ap.add_argument("--metrics", default=None,
                     help="registry dump from ingest_bench --metrics-out")
+    ap.add_argument("--tails", default="BENCH_tails.json",
+                    help="committed tail baseline — adds the SLO-burn "
+                         "table (skipped when the file is absent)")
     args = ap.parse_args(argv)
-    md = markdown(bench_rows(_load(args.ingest), _load(args.query)),
-                  "Latency (p50/p99)")
+    ingest, query = _load(args.ingest), _load(args.query)
+    md = markdown(bench_rows(ingest, query), "Latency (p50/p99)")
     mmd = markdown(metrics_rows(_load(args.metrics)),
                    "Registry latency series")
-    out = "\n".join(s for s in (md, mmd) if s)
+    smd = slo_markdown(slo_burn_rows(_load(args.tails), ingest, query))
+    out = "\n".join(s for s in (md, mmd, smd) if s)
     if not out:
         print("no latency fields found in the given artifacts")
         return 0

@@ -1,11 +1,15 @@
 """Observability tour: metrics registry, latency histograms, span traces.
 
-Ingests a small graph through the D4M connector, then walks the three
+Ingests a small graph through the D4M connector, then walks the
 surfaces `repro.obs` exposes:
 
   1. ``DBserver.metrics()``    — per-table/per-shard counters + p50/p99
+                                 + derived health gauges
   2. the raw ``Registry``      — labeled series, aggregation, snapshots
-  3. the ``Tracer``            — nested spans, slow-op log, Chrome export
+  3. the ``Tracer``            — nested spans, trace ids, slow-op log,
+                                 flight recorder, Chrome export
+  4. the exporters             — Prometheus text (with exemplars),
+                                 health report, ``DBserver.debug_bundle``
 
   PYTHONPATH=src python examples/observability.py
 """
@@ -18,7 +22,8 @@ from repro.obs import default_registry, default_tracer, set_enabled
 
 dbinit()
 DB = dbsetup("obsdemo", num_shards=4, capacity_per_shard=1 << 14,
-             batch_cap=4096, id_capacity=1 << 16)  # ~16k ids/shard
+             batch_cap=4096, id_capacity=1 << 16,  # ~16k ids/shard
+             memtable_cap=2048)  # small memtable: flushes show up in health
 T = DB["edges", "edgesT"]
 
 # --- generate some traffic -------------------------------------------------
@@ -82,6 +87,29 @@ if slow:
 tr.export_chrome("/tmp/obsdemo_trace.json")
 print("chrome trace -> /tmp/obsdemo_trace.json "
       "(load in chrome://tracing or ui.perfetto.dev)")
+
+flights = tr.flight_recordings()
+if flights:
+    rec = flights[-1]
+    print(f"flight recorder: {len(flights)} slow-op trees; last trace "
+          f"{rec['trace']} root={rec['root']['name']} "
+          f"({len(rec['spans'])} spans)")
+
+# --- 4. exporters + debug bundle -------------------------------------------
+from repro.obs import health_report, prometheus_text
+
+health = m["tables"]["edges"]["health"]
+print(f"\nhealth: read_amp={health['read_amplification']:.2f} "
+      f"write_amp={health['write_amplification']:.2f} "
+      f"retraces={health['retraces']}")
+prom = prometheus_text()
+exemplar_lines = [l for l in prom.splitlines() if "trace_id=" in l]
+print(f"prometheus exposition: {len(prom.splitlines())} lines, "
+      f"{len(exemplar_lines)} bucket exemplars linking to traces")
+print(health_report(fmt="term").splitlines()[0], "... (health_report)")
+DB.debug_bundle("/tmp/obsdemo_bundle.zip")
+print("debug bundle -> /tmp/obsdemo_bundle.zip "
+      "(metrics + prometheus + slow traces + config + geometry)")
 
 # --- kill switch -----------------------------------------------------------
 set_enabled(False)               # every instrument becomes a no-op

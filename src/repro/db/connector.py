@@ -34,7 +34,9 @@ import numpy as np
 
 from ..core.assoc import Assoc, split_str
 from ..core.dictionary import StringDict
-from ..obs import Histogram, default_registry
+from ..obs import Histogram, default_registry, default_tracer
+from ..obs import span as obs_span
+from ..obs.export import registry_from_snapshot, write_debug_bundle
 from . import batching
 from .kvstore import ShardedTable, StoreConfig
 
@@ -221,6 +223,7 @@ class DBserver:
         self.tables: dict = {}
         self.wal_root: Optional[str] = None
         self._keydict_journal: Optional[_DictJournal] = None
+        self._peer_snapshots: list = []  # other processes' registry dumps
         if wal_root is not None:
             self.attach_wal_root(wal_root)
 
@@ -402,11 +405,40 @@ class DBserver:
     # the metric-catalog op names (src/repro/db/README.md "Observability")
     _METRIC_OPS = ("ingest", "query", "scan", "flush", "major_compaction")
 
-    def metrics(self) -> dict:
+    def attach_process_snapshot(self, snapshot) -> None:
+        """Register another process's ``Registry.snapshot()`` (the dict,
+        or a path to its JSON dump) for ``metrics(all_processes=True)``.
+        SPMD launchers dump one registry per process; attaching them here
+        lets one connector answer for the whole mesh."""
+        if isinstance(snapshot, (str, os.PathLike)):
+            with open(snapshot) as f:
+                snapshot = json.load(f)
+        self._peer_snapshots.append(dict(snapshot))
+
+    def metrics(self, all_processes: bool = False) -> dict:
         """Aggregated observability snapshot of every live bound table:
         per-shard and per-table counters, per-op latency percentiles, WAL
-        append/fsync totals, plus a cross-table aggregate. JSON-ready."""
+        append/fsync totals, derived health gauges, plus a cross-table
+        aggregate. JSON-ready.
+
+        ``all_processes=True`` merges every snapshot registered via
+        ``attach_process_snapshot`` into this process's registry view
+        (``repro.db.spmd.merge_process_metrics`` semantics: counters sum,
+        histograms bucket-merge) before aggregating."""
+        for name, t in self.tables.items():
+            store = getattr(t, "store", None)
+            if store is not None and not store._closed:
+                store.refresh_health_gauges()
         reg = default_registry()
+        if all_processes and self._peer_snapshots:
+            from .spmd import merge_process_metrics
+            merged = merge_process_metrics(
+                [reg.snapshot()] + self._peer_snapshots)
+            reg = registry_from_snapshot(merged)
+
+        def gauge_val(name, **labels):
+            insts = reg.series(name, **labels)
+            return insts[0].value if insts else 0
 
         def pooled(name, tables, **extra):
             h = Histogram(reg, name, {})
@@ -443,10 +475,28 @@ class DBserver:
                                           op="append"),
                        "fsync_s": pooled("wal_latency_s", [name],
                                          op="fsync"),
+                       "backlog_bytes": gauge_val("wal_backlog_bytes",
+                                                  log=name),
+                   },
+                   "health": {
+                       "read_amplification": gauge_val(
+                           "lsm_read_amplification", table=name),
+                       "write_amplification": gauge_val(
+                           "lsm_write_amplification", table=name),
+                       "retraces": ctr_sum("lsm_retraces", [name]),
+                       "compiled_shapes": sum(
+                           g.value for g in
+                           reg.series("lsm_compiled_shapes")),
                    },
                    "shards": {}}
             for s in range(store.S):
                 tbl["shards"][str(s)] = {
+                    "memtable_occupancy": gauge_val(
+                        "db_memtable_occupancy", table=name, shard=s),
+                    "resident_runs": gauge_val("lsm_resident_runs",
+                                               table=name, shard=s),
+                    "compaction_debt_entries": gauge_val(
+                        "lsm_compaction_debt_entries", table=name, shard=s),
                     "ingest_entries": ctr_sum("db_ingest_entries", [name],
                                               shard=s),
                     "point_queries": ctr_sum("db_point_queries", [name],
@@ -489,6 +539,42 @@ class DBserver:
         with open(path, "w") as f:
             json.dump(snap, f, indent=1, sort_keys=True)
         return snap
+
+    def debug_bundle(self, path: str, bloom_probes: int = 256) -> str:
+        """One-stop diagnostic archive (zip) for a support ticket: raw
+        registry snapshot + Prometheus exposition + slow traces / flight
+        recordings, plus the store config, each table's resident geometry
+        (runs, levels, L0 slots, memtable fill), and the aggregated
+        ``metrics()`` view. Health gauges (incl. the bloom fp probe) are
+        refreshed first so the bundle is self-consistent. Returns
+        ``path``."""
+        geometry = {}
+        for name, t in self.tables.items():
+            store = getattr(t, "store", None)
+            if store is None or store._closed:
+                continue
+            store.refresh_health_gauges(bloom_probes=bloom_probes)
+            geo = {"engine": store.engine,
+                   "num_shards": store.S,
+                   "memtable_cap": store.mem_cap,
+                   "memtable_n": [int(x) for x in store._mem_n],
+                   "stats": store.engine_stats()}
+            if store.engine == "lsm":
+                runs = store._runs
+                geo["level_caps"] = list(runs.level_caps)
+                geo["l0_slots"] = runs.K0
+                geo["resident_runs"] = [runs.resident_runs(s)
+                                        for s in range(store.S)]
+                geo["level_entries_per_shard"] = [
+                    [int(n) for n in lv["n"]] for lv in runs.levels]
+            geometry[name] = geo
+        extra = {
+            "store_config": dataclasses.asdict(self.config),
+            "resident_geometry": geometry,
+            "metrics_view": self.metrics(),
+        }
+        return write_debug_bundle(path, reg=default_registry(),
+                                  tracer=default_tracer(), extra=extra)
 
 
 class Table:
@@ -564,6 +650,12 @@ class Table:
         rows = np.asarray(rows, dtype=object)
         cols = np.asarray(cols, dtype=object)
         vals = np.asarray(vals)
+        # connector-level root span: every batch (dict encode, WAL append,
+        # memtable insert, any flush/compaction) shares ONE trace id
+        with obs_span("connector.put", table=self.name, n=len(rows)):
+            self._put_triple_batches(rows, cols, vals)
+
+    def _put_triple_batches(self, rows, cols, vals) -> None:
         for br, bc, bv in batching.batch_triples(rows, cols, vals,
                                                  self.server.char_budget):
             rid = self.server.encode_keys(br)
@@ -607,6 +699,11 @@ class Table:
         return self._assemble(r, c, v)
 
     def _execute(self, rplan: ReadPlan, cplan: ReadPlan):
+        with obs_span("connector.read", table=self.name,
+                      row_kind=rplan.kind, col_kind=cplan.kind):
+            return self._execute_plans(rplan, cplan)
+
+    def _execute_plans(self, rplan: ReadPlan, cplan: ReadPlan):
         """Run a (row-plan, col-plan) pair against the store.
 
         Routing rules (db/README.md "Transpose pairs & read planning"):

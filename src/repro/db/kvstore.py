@@ -416,8 +416,16 @@ class ShardedTable:
                 for s in range(num_shards)]
             self._h_flush_single = self._reg.histogram(
                 "db_op_latency_s", table=name, op="flush")
+            # retrace/write-amp series parity with the LSM engine (always
+            # zero here: the legacy path has no tracked fused builders)
+            self._ctr_single_extra = [
+                self._reg.counter("lsm_retraces", table=name, op="query"),
+                self._reg.counter("lsm_retraces", table=name, op="scan"),
+                self._reg.counter("lsm_flush_entries", table=name),
+                self._reg.counter("lsm_compact_entries", table=name)]
             for inst in (list(self._ctr_single.values())
                          + self._c_shard_flush_single
+                         + self._ctr_single_extra
                          + [self._h_flush_single]):
                 inst.reset()
         self._mem_r = jnp.full((num_shards, self.mem_cap), I32_MAX, jnp.int32)
@@ -439,6 +447,7 @@ class ShardedTable:
         self._shard_views: dict = {}  # per-shard tablet slices (read cache)
         self._wal = None
         self._wal_dir = None
+        self._wal_ckpt_offset = 0
         if wal_dir is not None:
             self.attach_wal(wal_dir)
 
@@ -455,6 +464,9 @@ class ShardedTable:
             self._wal.close()
         self._wal_dir = wal_dir
         self._wal = WriteAheadLog(wal_path(wal_dir))
+        # WAL backlog baseline: everything currently in the log predates
+        # this process's appends, so a fresh attach owes a full replay
+        self._wal_ckpt_offset = 0
 
     def checkpoint(self) -> str:
         """Flush the memtable, snapshot the runs, mark the WAL offset.
@@ -463,7 +475,9 @@ class ShardedTable:
             raise ValueError("checkpoint() needs engine='lsm' and a wal_dir")
         from .lsm.manifest import write_snapshot
         self.flush()
-        return write_snapshot(self, self._wal_dir)
+        path = write_snapshot(self, self._wal_dir)
+        self._wal_ckpt_offset = self._wal.tell() if self._wal else 0
+        return path
 
     def close(self) -> None:
         """Release buffers and refuse further use (connector delete())."""
@@ -534,6 +548,36 @@ class ShardedTable:
         st["l0_used"] = [0] * self.S
         st["level_entries"] = []
         return st
+
+    def refresh_health_gauges(self, bloom_probes: int = 0) -> None:
+        """Recompute the derived health gauges for this table (and its
+        transpose sibling): memtable occupancy per shard, WAL backlog,
+        and — on the LSM engine — resident runs, compaction debt,
+        read/write amplification, and (``bloom_probes > 0``) the
+        observed-vs-theoretical bloom fp rate."""
+        self._check_open()
+        for s in range(self.S):
+            self._reg.gauge("db_memtable_occupancy", table=self.name,
+                            shard=s).set(int(self._mem_n[s]) / self.mem_cap)
+        if self._wal is not None:
+            self._wal.refresh_backlog_gauge(self._wal_ckpt_offset)
+        if self.engine == "lsm":
+            self._runs.refresh_health_gauges(bloom_probes=bloom_probes)
+        else:
+            # series parity with the LSM engine: one sorted run per shard
+            # once flushed, never any compaction debt
+            n_host = np.asarray(self.tablets.n)
+            for s in range(self.S):
+                self._reg.gauge("lsm_resident_runs", table=self.name,
+                                shard=s).set(int(n_host[s] > 0))
+                self._reg.gauge("lsm_compaction_debt_entries",
+                                table=self.name, shard=s).set(0)
+            self._reg.gauge("lsm_read_amplification",
+                            table=self.name).set(0.0)
+            self._reg.gauge("lsm_write_amplification",
+                            table=self.name).set(0.0)
+        if self.t_store is not None:
+            self.t_store.refresh_health_gauges(bloom_probes=bloom_probes)
 
     def nnz(self) -> int:
         self._check_open()

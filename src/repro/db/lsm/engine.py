@@ -56,7 +56,7 @@ from ...kernels.sorted_search import (sorted_search_batched,
                                       sorted_search_endpoints)
 from .bloom import (BITS_PER_KEY, MAX_HASHES, NUM_HASHES, bloom_build,
                     bloom_maybe_contains, bloom_maybe_contains_batch,
-                    fence_build, num_words)
+                    fence_build, num_words, theoretical_fp_rate)
 
 
 def fence_block(cap: int) -> int:
@@ -755,8 +755,22 @@ class LSMRuns:
                                             op="flush")
         self._h_compact = self._reg.histogram("db_op_latency_s", table=name,
                                               op="major_compaction")
+        # compile/retrace telemetry: one inc per fresh static signature of
+        # the fused read builders (see _fused_query_compiled)
+        self._c_retrace_q = self._reg.counter("lsm_retraces", table=name,
+                                              op="query")
+        self._c_retrace_s = self._reg.counter("lsm_retraces", table=name,
+                                              op="scan")
+        # write-amplification inputs: entries written into runs by flushes
+        # and rewritten by compactions (vs db_ingest_entries)
+        self._c_flush_entries = self._reg.counter("lsm_flush_entries",
+                                                  table=name)
+        self._c_compact_entries = self._reg.counter("lsm_compact_entries",
+                                                    table=name)
         for inst in ([self._h_flush, self._h_compact]
                      + list(self._ctr.values())
+                     + [self._c_retrace_q, self._c_retrace_s,
+                        self._c_flush_entries, self._c_compact_entries]
                      + self._c_shard_flush + self._c_shard_compact):
             inst.reset()
         # per-run sliced views of the stacked arrays (slicing copies ~MBs
@@ -824,6 +838,7 @@ class LSMRuns:
                             if k[0] not in ("l0", "fused")}
         self.l0_used = self.l0_used + landing.astype(np.int64)
         self._ctr["flushes"].inc()
+        self._c_flush_entries.inc(int(n_host[sidx].sum()))
         for s in sidx:
             self._c_shard_flush[s].inc()
         full = self.l0_used >= self.K0
@@ -914,6 +929,7 @@ class LSMRuns:
             lv["maxr"][mask] = -1
         self._view_cache.clear()
         self._ctr["major_compactions"].inc()
+        self._c_compact_entries.inc(int(n_host[mask].sum()))
         for s in np.flatnonzero(mask):
             self._c_shard_compact[s].inc()
 
@@ -923,6 +939,76 @@ class LSMRuns:
         n = sum(1 for lv in self.levels if lv["n"][s])
         n += sum(1 for k in range(int(self.l0_used[s])) if self.l0_n[s, k])
         return n
+
+    # --------------------------------------------------------- health view
+    def refresh_health_gauges(self, bloom_probes: int = 0) -> None:
+        """Derive the engine health gauges from current state: resident
+        runs + compaction debt per shard, read amplification (runs probed
+        per read dispatch) and write amplification (entries written by
+        flush/compaction per entry ingested) per table. All inputs are
+        host-side mirrors/counters — no device sync. ``bloom_probes > 0``
+        additionally measures the observed bloom fp rate by probing each
+        resident run's filter with keys provably outside its row range
+        (costs one tiny dispatch per resident run)."""
+        reg = self._reg
+        for s in range(self.S):
+            reg.gauge("lsm_resident_runs", table=self.name, shard=s).set(
+                self.resident_runs(s))
+            u = int(self.l0_used[s])
+            reg.gauge("lsm_compaction_debt_entries", table=self.name,
+                      shard=s).set(int(self.l0_n[s, :u].sum()))
+        c = self._ctr
+        reads = int(c["fused_dispatches"].value
+                    + c["perrun_dispatches"].value)
+        probed = int(c["runs_probed"].value)
+        reg.gauge("lsm_read_amplification", table=self.name).set(
+            probed / reads if reads else 0.0)
+        ingested = sum(int(x.value) for x in
+                       reg.series("db_ingest_entries", table=self.name))
+        written = int(self._c_flush_entries.value
+                      + self._c_compact_entries.value)
+        reg.gauge("lsm_write_amplification", table=self.name).set(
+            written / ingested if ingested else 0.0)
+        if bloom_probes:
+            obs_fp, theo_fp = self._bloom_fp_probe(bloom_probes)
+            reg.gauge("lsm_bloom_fp_observed", table=self.name).set(obs_fp)
+            reg.gauge("lsm_bloom_fp_theoretical",
+                      table=self.name).set(theo_fp)
+
+    def _bloom_fp_probe(self, probes: int):
+        """(observed, theoretical) bloom fp rate over the resident runs.
+
+        Probe keys are sampled outside a run's host-tracked [minr, maxr]
+        row range, so the run provably does not contain them — any filter
+        hit is a certain false positive. The theoretical rate is the
+        classic bound, probe-count weighted across runs."""
+        rng = np.random.default_rng(0xB100F)
+        tot_probes = tot_fp = 0
+        theo_w = 0.0
+        for s in range(self.S):
+            runs = [(lv["bloom"][s], lv["hashes"], lv["words"],
+                     int(lv["n"][s]), int(lv["minr"][s]), int(lv["maxr"][s]))
+                    for lv in self.levels if lv["n"][s]]
+            runs += [(self.l0_bloom[s, k], self._h0, self._w0,
+                      int(self.l0_n[s, k]), int(self.l0_min[s, k]),
+                      int(self.l0_max[s, k]))
+                     for k in range(int(self.l0_used[s]))
+                     if self.l0_n[s, k]]
+            for words, n_hashes, n_words, n_keys, minr, maxr in runs:
+                cand = rng.integers(0, self.id_capacity, 4 * probes)
+                cand = cand[(cand < minr) | (cand > maxr)][:probes]
+                if len(cand) < probes:
+                    continue  # run spans ~the whole id space: no negatives
+                hits = bloom_maybe_contains(
+                    jnp.asarray(words), jnp.asarray(cand, jnp.int32),
+                    n_hashes=n_hashes)
+                tot_fp += int(np.asarray(hits).sum())
+                tot_probes += probes
+                theo_w += probes * theoretical_fp_rate(n_keys, n_words,
+                                                       n_hashes)
+        if not tot_probes:
+            return 0.0, 0.0
+        return tot_fp / tot_probes, theo_w / tot_probes
 
     def _iter_runs_oldest_first(self, s: int):
         """Yield (rows, cols, vals, fence, bloom, n, block, minr, maxr,
@@ -982,6 +1068,32 @@ class LSMRuns:
             self._view_cache[key] = view
         return view
 
+    # -- compile/retrace telemetry ----------------------------------------
+    # The fused read builders are lru_cache'd on their STATIC signature, so
+    # a builder cache miss == one fresh XLA trace+compile. Counting misses
+    # turns the "no batch size ever retraces" serving invariant into a
+    # registry-asserted guarantee: after warm_reads() the lsm_retraces
+    # counter must stay flat across any batch-size sweep.
+    def _fused_query_compiled(self, *key):
+        misses0 = _fused_query_fn.cache_info().misses
+        fn = _fused_query_fn(*key)
+        ci = _fused_query_fn.cache_info()
+        if ci.misses != misses0:
+            self._c_retrace_q.inc()
+            self._reg.gauge("lsm_compiled_shapes", op="query").set(
+                ci.currsize)
+        return fn
+
+    def _fused_scan_compiled(self, *key):
+        misses0 = _fused_scan_fn.cache_info().misses
+        fn = _fused_scan_fn(*key)
+        ci = _fused_scan_fn.cache_info()
+        if ci.misses != misses0:
+            self._c_retrace_s.inc()
+            self._reg.gauge("lsm_compiled_shapes", op="scan").set(
+                ci.currsize)
+        return fn
+
     def query_shard_fused(self, s: int, q: np.ndarray,
                           mem_host: Optional[Tuple] = None,
                           max_return: int = 256,
@@ -1039,9 +1151,10 @@ class LSMRuns:
         n_tiles = max(1, -(-n_q // tile))
         if n_tiles > 1:
             self._ctr["fused_tiles"].inc(n_tiles)
-        fn = _fused_query_fn(self.combiner, blocks, hashes, self._b0,
-                             self._h0, r_ret, mem_mode, pack,
-                             self.use_pallas, has_filter)
+        fn = self._fused_query_compiled(self.combiner, blocks, hashes,
+                                        self._b0, self._h0, r_ret,
+                                        mem_mode, pack, self.use_pallas,
+                                        has_filter)
         tr = self._trace
         out_r, out_c, out_v = [], [], []
         hit_any = None
@@ -1062,11 +1175,10 @@ class LSMRuns:
                     self._ctr["fused_widen_retries"].inc()
                     self._ctr["fused_dispatches"].inc()
                     with tr.span("widen_retry", width=int(cnt_max)):
-                        wfn = _fused_query_fn(self.combiner, blocks,
-                                              hashes, self._b0, self._h0,
-                                              _bucket(int(cnt_max)),
-                                              mem_mode, pack,
-                                              self.use_pallas, has_filter)
+                        wfn = self._fused_query_compiled(
+                            self.combiner, blocks, hashes, self._b0,
+                            self._h0, _bucket(int(cnt_max)), mem_mode,
+                            pack, self.use_pallas, has_filter)
                         out = wfn(q_pad, levels, l0, mem, filt_dev)
                         cols_s, vals_s, keep, cnt_max, hits = \
                             tuple(np.asarray(x) for x in out)
@@ -1139,8 +1251,9 @@ class LSMRuns:
             return empty
         lohi = jnp.asarray(np.asarray([lo, hi], np.int32))
         w = _bucket(width, lo=16)
-        fn = _fused_scan_fn(self.combiner, blocks, self._b0, w, mem_mode,
-                            self.id_capacity, self.use_pallas, has_filter)
+        fn = self._fused_scan_compiled(self.combiner, blocks, self._b0, w,
+                                       mem_mode, self.id_capacity,
+                                       self.use_pallas, has_filter)
         tr = self._trace
         self._ctr["scan_dispatches"].inc()
         with tr.span("scan.fused", table=self.name, shard=s, lo=lo, hi=hi):
@@ -1153,10 +1266,10 @@ class LSMRuns:
                 self._ctr["scan_widen_retries"].inc()
                 self._ctr["scan_dispatches"].inc()
                 with tr.span("widen_retry", width=int(cnt_max)):
-                    fn = _fused_scan_fn(self.combiner, blocks, self._b0,
-                                        _bucket(int(cnt_max)), mem_mode,
-                                        self.id_capacity, self.use_pallas,
-                                        has_filter)
+                    fn = self._fused_scan_compiled(
+                        self.combiner, blocks, self._b0,
+                        _bucket(int(cnt_max)), mem_mode,
+                        self.id_capacity, self.use_pallas, has_filter)
                     out = fn(lohi, levels, l0, mem, filt_dev)
                     rows_s, cols_s, vals_s, keep, _ = \
                         tuple(np.asarray(x) for x in out)

@@ -68,6 +68,7 @@ class WriteAheadLog:
         self._c_fsyncs = reg.counter("wal_fsyncs", log=log)
         self._h_append = reg.histogram("wal_latency_s", log=log, op="append")
         self._h_fsync = reg.histogram("wal_latency_s", log=log, op="fsync")
+        self._g_backlog = reg.gauge("wal_backlog_bytes", log=log)
 
     # ------------------------------------------------------------ writing
     def append(self, rows: np.ndarray, cols: np.ndarray,
@@ -99,6 +100,14 @@ class WriteAheadLog:
 
     def tell(self) -> int:
         return self._f.tell()
+
+    def refresh_backlog_gauge(self, covered_offset: int = 0) -> int:
+        """Health gauge: bytes past ``covered_offset`` (the last
+        snapshot's ``wal_offset``) — what a crash right now would have to
+        replay. Returns the backlog."""
+        backlog = max(0, self.tell() - int(covered_offset))
+        self._g_backlog.set(backlog)
+        return backlog
 
     def close(self) -> None:
         self._f.close()

@@ -37,10 +37,19 @@ def _instrumented(fn, op: str):
     wall-time histograms (JAX dispatch is async; the histogram measures
     enqueue cost, not device compute). The raw jitted fn stays reachable as
     ``step.__wrapped__`` for callers that re-jit / AOT-lower the step
-    (launch/ingest.py does)."""
+    (launch/ingest.py does).
+
+    Compile/retrace telemetry: a jitted step's compile-cache growing after
+    a call means a fresh input shape signature traced — counted into
+    ``lsm_retraces{table=spmd}`` so the registry can assert steady-state
+    steps never recompile (same guarantee the fused read path makes)."""
     reg = default_registry()
     c_steps = reg.counter("spmd_steps", op=op)
+    c_retrace = reg.counter("lsm_retraces", table="spmd", op=op)
+    g_shapes = reg.gauge("lsm_compiled_shapes", table="spmd", op=op)
     h_step = reg.histogram("db_op_latency_s", table="spmd", op=op)
+    cache_size = getattr(fn, "_cache_size", None)
+    state = {"n": cache_size() if cache_size else 0}
 
     def step(*args, **kw):
         if not reg.enabled:
@@ -49,6 +58,12 @@ def _instrumented(fn, op: str):
         out = fn(*args, **kw)
         c_steps.inc()
         h_step.observe(perf_counter() - t0)
+        if cache_size is not None:
+            n = cache_size()
+            if n > state["n"]:
+                c_retrace.inc(n - state["n"])
+                g_shapes.set(n)
+                state["n"] = n
         return out
 
     step.__wrapped__ = fn

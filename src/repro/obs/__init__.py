@@ -7,10 +7,15 @@ metric catalog and span taxonomy used by the database stack.
 """
 from .metrics import (Counter, Gauge, Histogram, Registry, default_registry,
                       merge_snapshots, set_enabled)
-from .tracing import Tracer, default_tracer, set_tracing, span
+from .tracing import (Tracer, current_trace, default_tracer, set_tracing,
+                      span)
+from .export import (JsonlEmitter, health_report, prometheus_text,
+                     write_debug_bundle)
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "Registry", "default_registry",
     "merge_snapshots", "set_enabled",
-    "Tracer", "default_tracer", "set_tracing", "span",
+    "Tracer", "current_trace", "default_tracer", "set_tracing", "span",
+    "JsonlEmitter", "health_report", "prometheus_text",
+    "write_debug_bundle",
 ]

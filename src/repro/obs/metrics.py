@@ -21,6 +21,8 @@ import json
 import math
 import threading
 
+from .tracing import current_trace as _current_trace
+
 # ---------------------------------------------------------------- histogram
 _SUBBUCKETS = 8                      # bins per octave (factor 2**(1/8))
 _GROWTH = 2.0 ** (1.0 / _SUBBUCKETS)
@@ -57,6 +59,7 @@ class Histogram:
 
     def reset(self):
         self._buckets = [0] * _NBINS
+        self._exemplars = {}
         self.count = 0
         self.sum = 0.0
         self.min = math.inf
@@ -66,13 +69,24 @@ class Histogram:
         if not self._reg.enabled:
             return
         x = float(x)
-        self._buckets[_bucket_index(x)] += 1
+        i = _bucket_index(x)
+        self._buckets[i] += 1
         self.count += 1
         self.sum += x
         if x < self.min:
             self.min = x
         if x > self.max:
             self.max = x
+        trace = _current_trace()
+        if trace is not None:
+            # latest exemplar per bucket: which op landed in this latency
+            # band last -> join against the tracer's flight recordings
+            self._exemplars[i] = (x, trace)
+
+    def exemplars(self) -> dict:
+        """{bucket_index: (value, trace_id)} — latest sample per bucket
+        that was observed while a span was open."""
+        return dict(self._exemplars)
 
     def quantile(self, q: float) -> float:
         """Nearest-rank quantile from bucket counts, clamped to the exact
@@ -105,6 +119,7 @@ class Histogram:
         self.sum += other.sum
         self.min = min(self.min, other.min)
         self.max = max(self.max, other.max)
+        self._exemplars.update(other._exemplars)
 
     def snapshot(self) -> dict:
         s = {"count": int(self.count), "sum": float(self.sum)}
@@ -115,6 +130,10 @@ class Histogram:
             s.update({k: float(v) for k, v in self.percentiles().items()})
             s["buckets"] = {str(i): int(c)
                             for i, c in enumerate(self._buckets) if c}
+            if self._exemplars:
+                s["exemplars"] = {str(i): {"value": float(v), "trace": t}
+                                  for i, (v, t)
+                                  in sorted(self._exemplars.items())}
         return s
 
     def load_snapshot(self, snap: dict):
@@ -127,6 +146,8 @@ class Histogram:
             self.max = max(self.max, float(snap["max"]))
         for i, c in snap.get("buckets", {}).items():
             self._buckets[int(i)] += int(c)
+        for i, ex in snap.get("exemplars", {}).items():
+            self._exemplars[int(i)] = (float(ex["value"]), ex["trace"])
 
 
 class Counter:

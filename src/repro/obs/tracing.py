@@ -1,5 +1,6 @@
 """Per-op span tracing: nested wall-time spans in a bounded ring buffer,
-a slow-op log, and Chrome-trace / plain-JSON export.
+a slow-op log, trace-context propagation, a flight recorder for slow
+ops, and Chrome-trace / plain-JSON export.
 
     with span("flush", table="t", shard=3):
         ...
@@ -11,11 +12,23 @@ Spans record host wall time. Under JAX async dispatch that means a
 device round-trip — which is exactly the split the fused read path is
 designed around (one dispatch + one sync per query batch).
 
+Trace context: the root span of each nesting (depth 0) allocates a trace
+id (``t<hex>``); every child span inherits it, so one connector-level op
+(insert/query/scan/compaction) shares a single id from connector through
+kvstore, engine, and WAL. `current_trace()` exposes the active id so
+histograms can attach exemplars linking latency buckets back to traces.
+
+Flight recorder: when a ROOT span exceeds `slow_threshold_s`, its full
+span tree (root + all descendants, in completion order) is captured into
+a bounded ring — `flight_recordings()` — so a slow query can be explained
+after the fact without re-running under a profiler.
+
 Disabled mode hands back a shared no-op context manager: the only cost at
 a call site is one attribute check and one function call.
 """
 from __future__ import annotations
 
+import itertools
 import json
 import threading
 import time
@@ -37,7 +50,8 @@ _NULL_SPAN = _NullSpan()
 
 
 class _Span:
-    __slots__ = ("tracer", "name", "labels", "t0", "ts", "depth", "parent")
+    __slots__ = ("tracer", "name", "labels", "t0", "ts", "depth", "parent",
+                 "trace")
 
     def __init__(self, tracer, name, labels):
         self.tracer = tracer
@@ -48,7 +62,13 @@ class _Span:
         tr = self.tracer
         stack = tr._stack()
         self.depth = len(stack)
-        self.parent = stack[-1].name if stack else None
+        if stack:
+            self.parent = stack[-1].name
+            self.trace = stack[-1].trace
+        else:
+            self.parent = None
+            self.trace = "t%06x" % next(tr._trace_seq)
+            tr._local.tree = []
         stack.append(self)
         self.ts = time.time()
         self.t0 = time.perf_counter()
@@ -62,22 +82,33 @@ class _Span:
             stack.pop()
         rec = {"name": self.name, "ts": self.ts, "dur": dur,
                "depth": self.depth, "parent": self.parent,
-               "tid": threading.get_ident()}
+               "trace": self.trace, "tid": threading.get_ident()}
         if self.labels:
             rec["labels"] = self.labels
         tr._ring.append(rec)
         if dur >= tr.slow_threshold_s:
             tr._slow.append(rec)
+        tree = getattr(tr._local, "tree", None)
+        if tree is not None:
+            tree.append(rec)
+            if self.depth == 0:
+                if dur >= tr.slow_threshold_s:
+                    tr._flight.append({"trace": self.trace, "root": rec,
+                                       "spans": tree})
+                tr._local.tree = None
         return False
 
 
 class Tracer:
     def __init__(self, capacity: int = 8192, slow_threshold_s: float = 0.050,
-                 slow_capacity: int = 256, enabled: bool = True):
+                 slow_capacity: int = 256, flight_capacity: int = 64,
+                 enabled: bool = True):
         self.enabled = enabled
         self.slow_threshold_s = slow_threshold_s
         self._ring = deque(maxlen=capacity)
         self._slow = deque(maxlen=slow_capacity)
+        self._flight = deque(maxlen=flight_capacity)
+        self._trace_seq = itertools.count(1)
         self._local = threading.local()
 
     def _stack(self):
@@ -91,6 +122,11 @@ class Tracer:
             return _NULL_SPAN
         return _Span(self, name, labels)
 
+    def current_trace_id(self):
+        """Trace id of the innermost open span on this thread, or None."""
+        st = getattr(self._local, "stack", None)
+        return st[-1].trace if st else None
+
     # -- inspection / export ----------------------------------------------
     def spans(self):
         """Ring-buffer contents, oldest first."""
@@ -100,15 +136,24 @@ class Tracer:
         """Spans that exceeded slow_threshold_s, oldest first."""
         return list(self._slow)
 
+    def flight_recordings(self):
+        """Full span trees of root ops that exceeded slow_threshold_s,
+        oldest first: {trace, root, spans} with spans in completion
+        order (children before their parent)."""
+        return list(self._flight)
+
     def clear(self):
         self._ring.clear()
         self._slow.clear()
+        self._flight.clear()
 
     def export_json(self, path: str):
         with open(path, "w") as f:
             json.dump({"slow_threshold_s": self.slow_threshold_s,
                        "spans": self.spans(),
-                       "slow_ops": self.slow_ops()}, f, indent=1)
+                       "slow_ops": self.slow_ops(),
+                       "flight_recordings": self.flight_recordings()},
+                      f, indent=1)
 
     def export_chrome(self, path: str):
         """chrome://tracing / Perfetto 'complete' (ph=X) events, one per
@@ -120,7 +165,8 @@ class Tracer:
                 "ts": rec["ts"] * 1e6, "dur": rec["dur"] * 1e6,
                 "pid": 0, "tid": rec["tid"],
                 "args": dict(rec.get("labels", {}),
-                             depth=rec["depth"], parent=rec["parent"]),
+                             depth=rec["depth"], parent=rec["parent"],
+                             trace=rec.get("trace")),
             })
         with open(path, "w") as f:
             json.dump({"traceEvents": events,
@@ -138,6 +184,13 @@ def default_tracer() -> Tracer:
 def span(name: str, **labels):
     """Span on the process-global default tracer."""
     return _DEFAULT.span(name, **labels)
+
+
+def current_trace():
+    """Trace id of the innermost open span on the default tracer (this
+    thread), or None when no span is open / tracing is disabled."""
+    st = getattr(_DEFAULT._local, "stack", None)
+    return st[-1].trace if st else None
 
 
 def set_tracing(on: bool):

@@ -1,10 +1,14 @@
 """The CI bench-gate must go red on a synthetic >20% ratio regression and
-stay green within the threshold (acceptance bar for the gate job), and its
-markdown summary must land in $GITHUB_STEP_SUMMARY."""
+stay green within the threshold (acceptance bar for the gate job), its
+markdown summary must land in $GITHUB_STEP_SUMMARY, and the tail p99/p50
+gate must respect the committed baseline + noise-floor budget (red past
+it, green within it, advisory bootstrap without a baseline file)."""
 import json
 
-from benchmarks.gate import (compare, extract_ratios, extract_tail_ratios,
-                             main, markdown, tail_markdown)
+from benchmarks.gate import (compare, compare_tails, extract_ratios,
+                             extract_tail_noise, extract_tail_ratios,
+                             main, markdown, tail_gate_markdown,
+                             tail_markdown)
 
 BASE_QUERY = {
     "rows": [{"fused_speedup": 1.8}, {"fused_speedup": 1.5}],
@@ -57,7 +61,11 @@ def test_main_exit_codes_and_step_summary(tmp_path, monkeypatch):
     bi.write_text(json.dumps(BASE_INGEST))
     summary = tmp_path / "summary.md"
     monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
-    argv_base = ["--baseline-ingest", str(bi), "--baseline-query", str(bq)]
+    # point the tail baseline at a nonexistent file: this test exercises
+    # the tracked-ratio gate alone (the repo root commits a real
+    # BENCH_tails.json that would otherwise arm the tail gate)
+    argv_base = ["--baseline-ingest", str(bi), "--baseline-query", str(bq),
+                 "--tail-baseline", str(tmp_path / "no_tails.json")]
     # identical fresh run -> green
     assert main(argv_base + ["--new-ingest", str(bi),
                              "--new-query", str(bq)]) == 0
@@ -74,46 +82,118 @@ def test_main_exit_codes_and_step_summary(tmp_path, monkeypatch):
     # no baselines at all -> advisory (repo bootstrap), green
     assert main(["--baseline-ingest", str(tmp_path / "none1.json"),
                  "--baseline-query", str(tmp_path / "none2.json"),
+                 "--tail-baseline", str(tmp_path / "no_tails.json"),
                  "--new-ingest", str(bi), "--new-query", str(bq)]) == 0
 
 
-def test_tail_ratios_are_advisory_only(tmp_path, monkeypatch):
-    """Tail-latency (p99/p50) ratios ride along in the summary but can
-    NEVER turn the gate red — even a 100x tail blowup must exit 0 while
-    still being visible in the advisory table."""
-    ingest = {"lsm_ingest_speedup": 1.4,
-              "engines": {"lsm": {"ingest_batch_p50_ms": 1.0,
-                                  "ingest_batch_p99_ms": 8.0,
-                                  "query_p50_ms": 0.5,
-                                  "query_p99_ms": 2.0}}}
-    query = {"rows": [{"fused_speedup": 1.5, "fused_p50_us": 100.0,
-                       "fused_p99_us": 400.0}],
-             "scan_rows": [{"range_len": 64, "scan_speedup": 2.2,
-                            "scan_p50_us": 200.0, "scan_p99_us": 900.0}]}
-    tails = extract_tail_ratios(ingest, query)
+TAIL_INGEST = {"lsm_ingest_speedup": 1.4,
+               "engines": {"lsm": {"ingest_batch_p50_ms": 1.0,
+                                   "ingest_batch_p99_ms": 8.0,
+                                   "query_p50_ms": 0.5,
+                                   "query_p99_ms": 2.0}},
+               "tail_noise": {"lsm_ingest_p99_over_p50":
+                              {"repeats": [7.0, 8.0, 10.0], "spread": 3.0},
+                              "lsm_query_p99_over_p50":
+                              {"repeats": [4.0, 4.4], "spread": 0.4}}}
+TAIL_QUERY = {"rows": [{"fused_speedup": 1.5, "fused_p50_us": 100.0,
+                        "fused_p99_us": 400.0}],
+              "scan_rows": [{"range_len": 64, "scan_speedup": 2.2,
+                             "scan_p50_us": 200.0, "scan_p99_us": 900.0}]}
+
+
+def test_extract_tail_ratios_and_noise():
+    tails = extract_tail_ratios(TAIL_INGEST, TAIL_QUERY)
     assert tails == {"lsm_ingest_p99_over_p50": 8.0,
                      "lsm_query_p99_over_p50": 4.0,
                      "fused_read_p99_over_p50": 4.0,
                      "scan_p99_over_p50": 4.5}
-    # old artifacts without tail fields -> no table at all
+    assert extract_tail_noise(TAIL_INGEST) == {
+        "lsm_ingest_p99_over_p50": 3.0, "lsm_query_p99_over_p50": 0.4}
+    # old artifacts without tail fields -> no table, no noise floor
     assert extract_tail_ratios(BASE_INGEST, BASE_QUERY) == {}
+    assert extract_tail_noise(BASE_INGEST) == {}
     assert tail_markdown({}, {}) == ""
-    # blow up every tail 100x in the fresh run; tracked ratios unchanged
-    worse = json.loads(json.dumps(query))
-    worse["rows"][0]["fused_p99_us"] *= 100
-    worse["scan_rows"][0]["scan_p99_us"] *= 100
+    assert tail_gate_markdown([], 0.5) == ""
+
+
+def test_compare_tails_budget_semantics():
+    base = extract_tail_ratios(TAIL_INGEST, TAIL_QUERY)
+    noise = extract_tail_noise(TAIL_INGEST)
+    # identical run -> all green
+    rows, ok = compare_tails(base, noise, dict(base), threshold=0.5)
+    assert ok and all(r["status"] == "ok" for r in rows)
+    # within the relative threshold -> green (1.4x < 1.5x budget)
+    mild = {k: v * 1.4 for k, v in base.items()}
+    _, ok = compare_tails(base, noise, mild, threshold=0.5)
+    assert ok
+    # the noise floor dominates when it is wider than the threshold:
+    # lsm_ingest budget = max(8*1.5, 8+3) = 12 -> 11.5 green, 12.5 red
+    _, ok = compare_tails(base, noise,
+                          dict(base, lsm_ingest_p99_over_p50=11.5), 0.5)
+    assert ok
+    rows, ok = compare_tails(base, noise,
+                             dict(base, lsm_ingest_p99_over_p50=12.5), 0.5)
+    assert not ok
+    flags = {r["ratio"]: r["status"] for r in rows}
+    assert flags["lsm_ingest_p99_over_p50"] == "REGRESSED"
+    assert flags["scan_p99_over_p50"] == "ok"
+    # one-sided: a shrinking tail is always green
+    _, ok = compare_tails(base, noise, {k: v * 0.1 for k, v in base.items()},
+                          threshold=0.5)
+    assert ok
+    # fail-closed: a baselined family missing from the fresh run is red
+    rows, ok = compare_tails(base, noise,
+                             {k: v for k, v in base.items()
+                              if k != "scan_p99_over_p50"}, 0.5)
+    assert not ok
+    assert {r["ratio"]: r["status"] for r in rows}["scan_p99_over_p50"] \
+        == "MISSING"
+    # a family only the fresh run reports stays advisory
+    rows, ok = compare_tails(base, noise, dict(base, brand_new_tail=9.0),
+                             threshold=0.5)
+    assert ok
+    assert {r["ratio"]: r["status"] for r in rows}["brand_new_tail"] \
+        == "untracked"
+
+
+def test_tail_gate_main_red_green_and_bootstrap(tmp_path, monkeypatch):
+    """End-to-end through main(): a tail blowup with tracked ratios
+    unchanged must red the gate once a tail baseline is committed, stay
+    advisory without one, and --write-tail-baseline must emit a baseline
+    that gates a subsequent identical run green."""
     bi, bq = tmp_path / "bi.json", tmp_path / "bq.json"
+    bi.write_text(json.dumps(TAIL_INGEST))
+    bq.write_text(json.dumps(TAIL_QUERY))
+    worse = json.loads(json.dumps(TAIL_QUERY))
+    worse["rows"][0]["fused_p99_us"] *= 100   # tail blowup, speedups same
     wq = tmp_path / "wq.json"
-    bi.write_text(json.dumps(ingest))
-    bq.write_text(json.dumps(query))
     wq.write_text(json.dumps(worse))
     summary = tmp_path / "summary.md"
     monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
-    assert main(["--baseline-ingest", str(bi), "--baseline-query", str(bq),
-                 "--new-ingest", str(bi), "--new-query", str(wq)]) == 0
-    text = summary.read_text()
-    assert "Tail latency (advisory)" in text
-    assert "fused_read_p99_over_p50" in text
+    # bootstrap: no tail baseline -> advisory table, exit 0 even on blowup
+    no_tails = str(tmp_path / "no_tails.json")
+    argv = ["--baseline-ingest", str(bi), "--baseline-query", str(bq),
+            "--new-ingest", str(bi)]
+    assert main(argv + ["--new-query", str(wq),
+                        "--tail-baseline", no_tails]) == 0
+    assert "Tail latency (advisory)" in summary.read_text()
+    # write a tail baseline from the clean run, then gate against it
+    tails_path = str(tmp_path / "tails.json")
+    assert main(argv + ["--new-query", str(bq),
+                        "--write-tail-baseline", tails_path]) == 0
+    committed = json.loads((tmp_path / "tails.json").read_text())
+    assert committed["tails"]["fused_read_p99_over_p50"] == 4.0
+    assert committed["noise_floor"]["lsm_ingest_p99_over_p50"] == 3.0
+    # identical fresh run -> green, gated table in the summary
+    summary.write_text("")
+    assert main(argv + ["--new-query", str(bq),
+                        "--tail-baseline", tails_path]) == 0
+    assert "Tail latency gate" in summary.read_text()
+    # 100x fused-read tail blowup -> red, even though every tracked
+    # speedup ratio is untouched
+    assert main(argv + ["--new-query", str(wq),
+                        "--tail-baseline", tails_path]) == 1
+    assert "REGRESSED" in summary.read_text()
 
 
 def test_markdown_table_shape():

@@ -216,6 +216,103 @@ def test_disabled_tracer_hands_back_shared_null_span():
     with s1:
         pass
     assert tr.spans() == []
+    assert tr.current_trace_id() is None
+    assert tr.flight_recordings() == []
+
+
+# ------------------------------------ trace context + flight recorder
+def test_trace_id_propagation_root_allocates_children_inherit():
+    tr = Tracer(slow_threshold_s=10.0)
+    with tr.span("op_a", table="t") as root:
+        a_trace = root.trace
+        assert tr.current_trace_id() == a_trace
+        with tr.span("kv") as child:
+            assert child.trace == a_trace       # inherited, not fresh
+            with tr.span("wal") as grand:
+                assert grand.trace == a_trace
+    with tr.span("op_b") as root_b:
+        b_trace = root_b.trace
+    assert a_trace != b_trace                   # one id per root op
+    assert tr.current_trace_id() is None        # nothing open
+    by_trace = {}
+    for rec in tr.spans():
+        by_trace.setdefault(rec["trace"], set()).add(rec["name"])
+    assert by_trace[a_trace] == {"op_a", "kv", "wal"}
+    assert by_trace[b_trace] == {"op_b"}
+
+
+def test_histogram_exemplars_capture_merge_and_roundtrip():
+    from repro.obs import span as gspan
+
+    reg = Registry()
+    h = reg.histogram("lat")
+    h.observe(1e-3)                       # no open span -> no exemplar
+    assert h.exemplars() == {}
+    with gspan("op"):
+        from repro.obs import current_trace
+        tid = current_trace()
+        assert tid is not None
+        h.observe(2e-3)
+        h.observe(64e-3)                  # different bucket, same trace
+    ex = h.exemplars()
+    assert len(ex) == 2
+    assert all(t == tid for _v, t in ex.values())
+    assert sorted(v for v, _t in ex.values()) == [2e-3, 64e-3]
+    # snapshot carries them; load_snapshot round-trips into a sibling
+    snap = h.snapshot()
+    assert {e["trace"] for e in snap["exemplars"].values()} == {tid}
+    h2 = reg.histogram("lat2")
+    h2.load_snapshot(snap)
+    assert h2.exemplars() == ex
+    # merge propagates exemplars (latest-wins per bucket)
+    h3 = reg.histogram("lat3")
+    h3.merge(h)
+    assert h3.exemplars() == ex
+    # disabled registry: observe is a no-op, no exemplar capture even
+    # under an open span (the kill switch gates the whole hot path)
+    off = Registry(enabled=False)
+    hoff = off.histogram("lat")
+    with gspan("op2"):
+        hoff.observe(5e-3)
+    assert hoff.count == 0 and hoff.exemplars() == {}
+
+
+def test_flight_recorder_captures_slow_trees_and_evicts():
+    tr = Tracer(slow_threshold_s=0.005, flight_capacity=2)
+    with tr.span("fast_root"):            # under threshold: not recorded
+        with tr.span("child"):
+            pass
+    assert tr.flight_recordings() == []
+    with tr.span("slow_root", table="t") as root:
+        slow_trace = root.trace
+        with tr.span("child_a"):
+            pass
+        with tr.span("child_b"):
+            time.sleep(0.008)
+    recs = tr.flight_recordings()
+    assert len(recs) == 1
+    rec = recs[0]
+    assert rec["trace"] == slow_trace
+    assert rec["root"]["name"] == "slow_root"
+    # full tree in completion order, every span sharing the root's trace
+    assert [s["name"] for s in rec["spans"]] == \
+        ["child_a", "child_b", "slow_root"]
+    assert all(s["trace"] == slow_trace for s in rec["spans"])
+    # the root's wall includes its children: a slow child alone pushes
+    # the root over the threshold, so the tree is still captured
+    with tr.span("root2"):
+        with tr.span("slow_child"):
+            time.sleep(0.008)
+    assert [r["root"]["name"] for r in tr.flight_recordings()] == \
+        ["slow_root", "root2"]
+    # bounded ring: capacity 2 keeps only the newest two recordings
+    for i in range(3):
+        with tr.span(f"slow_{i}"):
+            time.sleep(0.006)
+    names = [r["root"]["name"] for r in tr.flight_recordings()]
+    assert len(names) == 2 and names == ["slow_1", "slow_2"]
+    tr.clear()
+    assert tr.flight_recordings() == []
 
 
 # ------------------------------------------- engine/server instrumentation
@@ -303,7 +400,14 @@ def test_disabled_mode_overhead_budget():
     """Acceptance bar: with the registry disabled, the instrumentation
     left in the hot path must cost <2% of a point query. Measured as
     (actual instrument touches for one query) x (measured per-op disabled
-    cost), against the measured query wall time."""
+    cost), against the measured query wall time.
+
+    The v2 surface rides inside the same gated sites: trace-id allocation
+    lives in ``_Span.__enter__`` (a disabled tracer hands back the shared
+    null span, so no id is ever allocated) and exemplar capture lives in
+    ``Histogram.observe`` AFTER the ``enabled`` early-return — so the
+    disabled per-op costs measured below are the true all-in costs of the
+    PR-9 instrumentation, not a subset."""
     st, r = _tiny("ovh_tab", "lsm")
     st.insert(r[:32], np.zeros(32, np.int32), np.ones(32, np.float32))
     q = np.unique(r[:8])
@@ -329,10 +433,14 @@ def test_disabled_mode_overhead_budget():
     n_spans = len(tr.spans())
     assert n_spans >= 2 and n_obs >= 1    # instrumentation is actually live
 
-    # per-op cost with everything disabled
+    # per-op cost with everything disabled — these paths now also carry
+    # the trace-context + exemplar machinery behind the same switches
     priv = Registry(enabled=False)
     ptr = Tracer(enabled=False)
     c, h = priv.counter("x"), priv.histogram("y")
+    with ptr.span("probe"):
+        h.observe(1e-3)                   # even under an "open" span...
+    assert h.exemplars() == {} and ptr.flight_recordings() == []
     N = 20_000
 
     def cost(fn):

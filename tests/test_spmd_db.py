@@ -73,6 +73,48 @@ gm = collections.defaultdict(list); wm = collections.defaultdict(list)
 for k, v in zip(zip(got[0], got[1]), got[2]): gm[k].append(round(float(v), 5))
 for k, v in zip(zip(want[0], want[1]), want[2]): wm[k].append(round(float(v), 5))
 assert set(gm) == set(wm)
+
+# ---- cross-process metrics + retrace telemetry -------------------------
+# The mesh steps above ran through _instrumented: the registry must show
+# 3 spmd ingest steps and a retrace count equal to the compile-cache size
+# (first call compiles, steady-state steps never re-trace).
+from repro.obs import Registry, default_registry
+
+here = default_registry()
+assert sum(c.value for c in
+           here.series("spmd_steps", op="spmd_ingest")) == 3
+retr = sum(c.value for c in here.series("lsm_retraces", table="spmd"))
+shapes = sum(g.value for g in here.series("lsm_compiled_shapes",
+                                          table="spmd"))
+assert retr >= 1 and retr == shapes, (retr, shapes)
+
+# DBserver.metrics(all_processes=True): a simulated peer process snapshot
+# (what an SPMD launcher dumps per process) must merge into the connector
+# view — counters sum on top of this process's registry.
+from repro.db import dbsetup
+
+DB = dbsetup("meshdb", dict(num_shards=2, capacity_per_shard=1024,
+                            batch_cap=256, id_capacity=1 << 10))
+T = DB["mtab"]
+T.put_triple(np.asarray(["a", "b", "c"], object),
+             np.asarray(["x", "x", "y"], object),
+             np.asarray([1.0, 2.0, 3.0]))
+local_only = DB.metrics()["tables"]["mtab"]["shards"]
+local_sum = sum(s["ingest_entries"] for s in local_only.values())
+assert local_sum == 3, local_sum
+
+peer = Registry()
+peer.counter("db_ingest_entries", table="mtab", shard=0).inc(123)
+peer.counter("spmd_steps", op="spmd_ingest").inc(7)
+DB.attach_process_snapshot(peer.snapshot())
+merged = DB.metrics(all_processes=True)["tables"]["mtab"]["shards"]
+merged_sum = sum(s["ingest_entries"] for s in merged.values())
+assert merged_sum == local_sum + 123, (merged_sum, local_sum)
+# single-process view stays unchanged after the merge (merge is a view,
+# not a mutation of the live registry)
+again = DB.metrics()["tables"]["mtab"]["shards"]
+assert sum(s["ingest_entries"] for s in again.values()) == local_sum
+print("SPMD-METRICS-OK")
 print("SPMD-OK", len(got[0]))
 """
 
@@ -86,6 +128,7 @@ def test_spmd_ingest_matches_local_driver():
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-3000:]
     assert "SPMD-OK" in out.stdout
+    assert "SPMD-METRICS-OK" in out.stdout
 
 
 PAIR_SCRIPT = r"""
