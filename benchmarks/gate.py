@@ -18,6 +18,10 @@ JSON, and compares each against the baselines committed at the repo root:
                              engine, WORST queries_per_s ratio across the
                              query batch-size sweep (BENCH_ingest
                              ``lsm_query_speedup``)
+  * ``zipf_split_vs_static`` — dynamic-tablet routed load balance vs the
+                             static hash under a Zipf skew sweep
+                             (BENCH_ingest ``zipf`` section; advisory
+                             until a committed baseline carries it)
 
 A tracked ratio may drop at most ``--threshold`` (default 20%) below its
 committed baseline; any deeper drop exits nonzero. Ratios are used rather
@@ -91,6 +95,9 @@ def extract_ratios(ingest: Optional[dict],
             out["lsm_vs_single"] = float(ingest["lsm_ingest_speedup"])
         if "lsm_query_speedup" in ingest:
             out["query_lsm_vs_single"] = float(ingest["lsm_query_speedup"])
+        zipf = ingest.get("zipf") or {}
+        if "zipf_split_vs_static" in zipf:
+            out["zipf_split_vs_static"] = float(zipf["zipf_split_vs_static"])
     return out
 
 

@@ -472,6 +472,92 @@ def pair_ingest_advisory(entries_per_shard: int = 1 << 14, shards: int = 2,
     return {"pair_ingest": out}
 
 
+def zipf_skew_advisory(s: float, entries_per_shard: int = 1 << 14,
+                       shards: int = 4, batch: int = 1 << 12,
+                       memtable: int = 1 << 13, seed: int = 7) -> dict:
+    """Skewed-ingest A/B: static hash routing vs dynamic tablets under a
+    Zipf(s) row stream over a CONTIGUOUS hot range (unpermuted power-law
+    keys pile into the low-id shard — the Fig. 3 graph500 shape, worst
+    case for a fixed pre-split). The dynamic table runs
+    ``maybe_rebalance()`` every few batches, splitting the hot range and
+    spreading tablets across shards; the static table keeps the uniform
+    map. Reports the HOT-SHARD serving rate (queries/s on a Zipf-drawn id
+    batch, whose traffic the static map concentrates on one shard) and
+    the routed load balance (max/mean per-shard share of a fresh Zipf
+    window) for both, plus ``zipf_split_vs_static`` — the balance
+    improvement ratio the CI gate can track once a baseline carries it.
+    Advisory: single-host walls don't show the mesh-level win; the
+    balance ratio is the structural claim."""
+    id_cap = 1 << 22
+    total = entries_per_shard * shards
+    rng = np.random.default_rng(seed)
+    rows = (rng.zipf(s, total) % id_cap).astype(np.int32)
+    cols = rng.integers(0, 1 << 16, total).astype(np.int32)
+    vals = np.ones(total, np.float32)
+    cap = int(total * 1.25)  # static piles ~everything onto shard 0
+
+    def mk(name, dynamic):
+        return ShardedTable(name, num_shards=shards,
+                            capacity_per_shard=cap, batch_cap=batch,
+                            id_capacity=id_cap, memtable_cap=memtable,
+                            engine="lsm", dynamic_tablets=dynamic)
+
+    out = {"config": {"zipf_s": s, "entries_per_shard": entries_per_shard,
+                      "shards": shards, "batch": batch,
+                      "memtable": memtable}}
+    walls, qps, balance = {}, {}, {}
+    for name, dynamic in (("static", False), ("dynamic", True)):
+        warm = mk(f"zwarm_{name}", dynamic)  # compile off-clock
+        warm.warmup()
+        warm.insert(rows[:batch], cols[:batch], vals[:batch])
+        warm.flush()
+        st = mk(f"zipf_{name}", dynamic)
+        st.warmup()
+        t0 = time.time()
+        for step, i in enumerate(range(0, total, batch)):
+            st.insert(rows[i:i + batch], cols[i:i + batch],
+                      vals[i:i + batch])
+            if dynamic and step % 4 == 3:
+                st.maybe_rebalance()
+        st.flush()
+        st._runs.l0_rows.block_until_ready()
+        walls[name] = time.time() - t0
+        # hot-shard serving rate: Zipf-drawn query batches, first call
+        # warmed off-clock then best-of-3 (per-call dispatch cost is the
+        # signal; the static map funnels every dispatch to one shard)
+        q = (rng.zipf(s, 2048) % id_cap).astype(np.int32)
+        st.warm_reads()
+        st.query_rows(q)
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.time()
+            st.query_rows(q)
+            best = min(best, time.time() - t0)
+        qps[name] = len(q) / best
+        fresh = (rng.zipf(s, 1 << 15) % id_cap).astype(np.int64)
+        routed = (st.tablet_map.owner_of(fresh) if dynamic
+                  else shard_of(fresh.astype(np.int32), shards, id_cap))
+        per = np.bincount(routed, minlength=shards)
+        balance[name] = float(per.max() / per.mean())
+        if dynamic:
+            out["tablets"] = st.tablet_map.to_manifest()
+    out.update({
+        "ingest_s_static": walls["static"],
+        "ingest_s_dynamic": walls["dynamic"],
+        "hot_queries_per_s_static": qps["static"],
+        "hot_queries_per_s_dynamic": qps["dynamic"],
+        "load_balance_static": balance["static"],
+        "load_balance_dynamic": balance["dynamic"],
+        "zipf_split_vs_static": balance["static"] / balance["dynamic"],
+    })
+    print(f"zipf(s={s}) advisory: balance static="
+          f"{balance['static']:.2f} dynamic={balance['dynamic']:.2f} "
+          f"({out['zipf_split_vs_static']:.2f}x better) "
+          f"hot q/s static={qps['static']:>10,.0f} "
+          f"dynamic={qps['dynamic']:>10,.0f}")
+    return {"zipf": out}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -486,6 +572,11 @@ def main() -> None:
                     help="interleave N (single, lsm) ingest runs; the "
                          "reported lsm_ingest_speedup is the MEDIAN "
                          "per-repeat ratio (noise-robust CI gate metric)")
+    ap.add_argument("--zipf", type=float, default=None, metavar="S",
+                    help="also run the Zipf(S) skew A/B (static hash vs "
+                         "dynamic tablets): hot-shard queries/s + routed "
+                         "load balance, advisory zipf_split_vs_static "
+                         "ratio in the JSON artifact")
     ap.add_argument("--metrics-out", default=None,
                     help="also dump the full repro.obs registry snapshot "
                          "(counters + latency histograms) as JSON")
@@ -502,6 +593,10 @@ def main() -> None:
                                 repeats=args.repeats)
         result.update(pair_ingest_advisory(entries_per_shard=min(eps, 1 << 14),
                                            shards=args.shards))
+        if args.zipf:
+            result.update(zipf_skew_advisory(args.zipf,
+                                             entries_per_shard=min(eps,
+                                                                   1 << 14)))
         result["mode"] = "smoke" if args.smoke else "compare"
         with open(args.out, "w") as f:
             json.dump(result, f, indent=1)

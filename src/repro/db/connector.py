@@ -516,6 +516,16 @@ class DBserver:
                     "sibling": store.t_store.name,
                     "counters": store.t_store.engine_stats(),
                 }
+            tm = getattr(store, "tablet_map", None)
+            if tm is not None:
+                tbl["tablets"] = {
+                    "count": tm.n,
+                    "balance": gauge_val("lsm_tablet_balance", table=name),
+                    "splits": ctr_sum("lsm_tablet_splits", [name]),
+                    "moves": ctr_sum("lsm_tablet_moves", [name]),
+                    "owners": [int(o) for o in tm.owners],
+                    "boundaries": [int(b) for b in tm.splits],
+                }
             out["tables"][name] = tbl
         agg_counters: dict = {}
         for name in live:

@@ -62,6 +62,15 @@ class StoreConfig:
     an engine-level sibling shard set (``ShardedTable.t_store``): every
     ingest batch lands in both through ONE pair-tagged WAL record, and
     column selectors become fence-rangeable scans on the sibling.
+
+    ``dynamic_tablets=True`` replaces the static ``shard_of`` range hash
+    with a mutable ``TabletMap`` (``db.tablets``): hot row ranges split
+    at fence-derived median keys and tablets migrate between shards to
+    balance Zipfian load (``split_tablet`` / ``move_tablet`` /
+    ``maybe_rebalance``). The map rides in the snapshot manifest
+    (format 3) and splits/moves journal as WAL meta frames, so recovery
+    rebuilds the exact topology. Off by default: the static path is
+    byte-for-byte unchanged (WAL frames stay untagged).
     """
     num_shards: int = 4
     capacity_per_shard: int = 1 << 18
@@ -75,6 +84,7 @@ class StoreConfig:
     fanout: int = 4
     memtable_cap: int = None
     transpose: bool = False
+    dynamic_tablets: bool = False
 
     def replace(self, **kw) -> "StoreConfig":
         return dataclasses.replace(self, **kw)
@@ -291,6 +301,7 @@ class ShardedTable:
                  wal_dir: str = None, fused_reads: bool = None,
                  fused_q_limit: int = None, bloom_bits_per_key=None,
                  bloom_hashes=None, transpose: bool = None,
+                 dynamic_tablets: bool = None,
                  config: StoreConfig = None):
         # use_pallas=True runs the TPU kernels (interpret-mode on CPU — for
         # validation only; the XLA path is the CPU-performance path)
@@ -303,7 +314,8 @@ class ShardedTable:
             batch_cap=batch_cap, id_capacity=id_capacity,
             use_pallas=use_pallas, memtable_cap=memtable_cap, engine=engine,
             l0_slots=l0_slots, fanout=fanout, fused_reads=fused_reads,
-            fused_q_limit=fused_q_limit, transpose=transpose).items()
+            fused_q_limit=fused_q_limit, transpose=transpose,
+            dynamic_tablets=dynamic_tablets).items()
             if v is not None}
         if overrides:
             cfg = dataclasses.replace(cfg, **overrides)
@@ -311,6 +323,8 @@ class ShardedTable:
             raise ValueError(f"unknown engine {cfg.engine!r}")
         if cfg.transpose and cfg.engine != "lsm":
             raise ValueError("transpose pairs require engine='lsm'")
+        if cfg.dynamic_tablets and cfg.engine != "lsm":
+            raise ValueError("dynamic_tablets requires engine='lsm'")
         self.config = cfg
         self.name = name
         self.engine = cfg.engine
@@ -345,12 +359,25 @@ class ShardedTable:
         # primary logs each batch once, pair-tagged (see insert()).
         self.t_store = None
         if cfg.transpose:
+            # the sibling keeps STATIC col routing even when the primary
+            # runs dynamic tablets: the tablet map partitions the ROW id
+            # space; the sibling's keys are our cols
             self.t_store = ShardedTable(
                 name + "@T", combiner=combiner,
                 bloom_bits_per_key=bloom_bits_per_key,
                 bloom_hashes=bloom_hashes,
                 config=dataclasses.replace(cfg, transpose=False,
+                                           dynamic_tablets=False,
                                            memtable_cap=self.mem_cap))
+        # dynamic tablets: mutable row-range → tablet → owner map replacing
+        # the static shard_of hash; starts as its exact equivalent (one
+        # tablet per shard, same boundaries) until the first split
+        self.tablet_map = None
+        self._migrating = False
+        if cfg.dynamic_tablets:
+            from .tablets import TabletMap
+            self.tablet_map = TabletMap.uniform(cfg.num_shards,
+                                                cfg.id_capacity)
         # per-batch latency histograms + per-shard op counters/histograms
         # (repro.obs; series reset here so a fresh table reads zeros)
         self._reg = default_registry()
@@ -381,8 +408,15 @@ class ShardedTable:
             self._reg.histogram("db_shard_op_latency_s", table=name,
                                 shard=s, op="scan")
             for s in range(num_shards)]
+        self._c_tablet_splits = self._reg.counter("lsm_tablet_splits",
+                                                  table=name)
+        self._c_tablet_moves = self._reg.counter("lsm_tablet_moves",
+                                                 table=name)
+        self._c_tablet_merges = self._reg.counter("lsm_tablet_merges",
+                                                  table=name)
         for inst in ([self._h_ingest, self._h_query, self._h_scan,
-                      self._c_full_scans]
+                      self._c_full_scans, self._c_tablet_splits,
+                      self._c_tablet_moves, self._c_tablet_merges]
                      + self._c_shard_ingest + self._c_shard_query
                      + self._c_shard_scan + self._h_shard_query
                      + self._h_shard_scan):
@@ -527,8 +561,21 @@ class ShardedTable:
         self._check_open()
         self.query_rows(np.zeros(1, np.int32))  # point bucket
         if self.engine == "lsm" and self.fused_reads:
-            probe = np.linspace(0, self.id_capacity - 1,
-                                2 * self.S * 8 + 2).astype(np.int32)
+            if self.tablet_map is not None:
+                # skew-aware probe: a split/moved map can hand a shard a
+                # NARROW slice of the id space — a uniform linspace would
+                # give it <= 8 ids (point-bucket shape only) and the tile
+                # would compile lazily on the first real batch. Sample
+                # each shard's OWNED ranges instead, so both serving
+                # shapes re-warm after every topology change.
+                parts = [self.tablet_map.sample_shard_ids(s)
+                         for s in range(self.S)]
+                parts = [p for p in parts if len(p)]
+                probe = (np.concatenate(parts) if parts
+                         else np.zeros(1, np.int32))
+            else:
+                probe = np.linspace(0, self.id_capacity - 1,
+                                    2 * self.S * 8 + 2).astype(np.int32)
             self.query_rows(np.unique(probe))   # > 8 ids/shard: the tile
         if self.t_store is not None:  # column selectors serve from A^T
             self.t_store.warm_reads()
@@ -576,6 +623,11 @@ class ShardedTable:
                             table=self.name).set(0.0)
             self._reg.gauge("lsm_write_amplification",
                             table=self.name).set(0.0)
+        if self.tablet_map is not None:
+            self._reg.gauge("lsm_tablets", table=self.name).set(
+                self.tablet_map.n)
+            self._reg.gauge("lsm_tablet_balance", table=self.name).set(
+                self.tablet_map.shard_balance())
         if self.t_store is not None:
             self.t_store.refresh_health_gauges(bloom_probes=bloom_probes)
 
@@ -630,8 +682,21 @@ class ShardedTable:
         t0 = perf_counter()
         with self._trace.span("ingest", table=self.name, n=n):
             if _log and self._wal is not None:
-                self._wal.append(rows, cols, vals,
-                                 pair=self.t_store is not None)
+                pair = self.t_store is not None
+                if self.tablet_map is None:
+                    self._wal.append(rows, cols, vals, pair=pair)
+                else:
+                    # one TAGGED frame per tablet touched: a recovering
+                    # process replays only its own tablets' suffix by
+                    # skipping foreign frames. Duplicates of one
+                    # (row, col) share a tablet, so per-tablet framing
+                    # preserves within-key order (combiner semantics).
+                    tidx = self.tablet_map.tablet_of(rows)
+                    tids = self.tablet_map.tablet_ids
+                    for t in np.unique(tidx):
+                        sel = np.flatnonzero(tidx == t)
+                        self._wal.append(rows[sel], cols[sel], vals[sel],
+                                         pair=pair, tablet=int(tids[t]))
             self._insert_batch(rows, cols, vals)
             if self.t_store is not None:
                 self.t_store._insert_batch(cols, rows, vals)
@@ -641,11 +706,17 @@ class ShardedTable:
         n = len(rows)
         if n > self.mem_cap:
             raise OverflowError(f"batch {n} exceeds memtable {self.mem_cap}")
-        dest = shard_of(rows, self.S, self.id_capacity)
+        if self.tablet_map is not None:
+            tidx = self.tablet_map.tablet_of(rows)
+            dest = self.tablet_map.owners[tidx].astype(np.int32)
+            if not self._migrating:  # migration re-inserts aren't load
+                self.tablet_map.record_load(tidx)
+        else:
+            dest = shard_of(rows, self.S, self.id_capacity)
         order = np.argsort(dest, kind="stable")
         dest, rows, cols, vals = dest[order], rows[order], cols[order], vals[order]
         counts_b = np.bincount(dest, minlength=self.S)
-        if self._reg.enabled:
+        if self._reg.enabled and not self._migrating:
             for s in np.nonzero(counts_b)[0]:
                 self._c_shard_ingest[s].inc(int(counts_b[s]))
         if (self._mem_n + counts_b > self.mem_cap).any():
@@ -766,6 +837,188 @@ class ShardedTable:
         if self.t_store is not None:
             self.t_store.major_compact()
 
+    # ------------------------------------------------------------ tablets
+    def _require_tablets(self):
+        if self.tablet_map is None:
+            raise ValueError(
+                f"table {self.name!r} was not built with "
+                "dynamic_tablets=True")
+        return self.tablet_map
+
+    def split_tablet(self, tablet_id: int = None, key: int = None):
+        """Split one tablet's row range in two (metadata only — both
+        halves stay on the owning shard until a move rebalances them).
+
+        Defaults pick the hottest tablet by recorded load and split at
+        the owner shard's fence-derived median key inside the range (the
+        engine's fence pointers uniformly sample each sorted run, so the
+        median fence approximates the median data key for free). The op
+        is journaled as a WAL meta frame BEFORE the map changes, with the
+        new tablet id pinned, so replay reproduces the identical map.
+        Returns the new right-half tablet id, or None when the tablet
+        cannot split (range width 1)."""
+        self._check_open()
+        tm = self._require_tablets()
+        if tablet_id is None:
+            tablet_id = int(tm.tablet_ids[int(np.argmax(tm.loads))])
+        lo, hi = tm.range_of(tablet_id)
+        if hi - lo <= 1:
+            return None
+        if key is None:
+            self.flush()  # fences only see flushed data
+            s = int(tm.owners[tm.index_of(tablet_id)])
+            key = self._runs.fence_median(s, lo, hi)
+        key = int(key)
+        if not lo < key < hi:
+            return None
+        new_id = tm.next_id
+        if self._wal is not None:
+            self._wal.append_meta({"op": "split", "tablet": int(tablet_id),
+                                   "key": key, "new": new_id})
+        tm.split(tablet_id, key, new_id=new_id)
+        self._c_tablet_splits.inc()
+        return new_id
+
+    def move_tablet(self, tablet_id: int, dst: int) -> bool:
+        """Migrate one tablet to shard ``dst``: journal a WAL meta frame,
+        update the map, then physically re-route the SOURCE shard (scan
+        its combined triples, clear its runs, re-insert through the new
+        map). Re-inserting combined values once each is a no-op under all
+        four combiners, so reads are unchanged modulo placement. Returns
+        False when ``dst`` already owns the tablet."""
+        self._check_open()
+        tm = self._require_tablets()
+        dst = int(dst)
+        if not 0 <= dst < self.S:
+            raise ValueError(f"destination shard {dst} out of range")
+        src = int(tm.owners[tm.index_of(tablet_id)])
+        if src == dst:
+            return False
+        if self._wal is not None:
+            self._wal.append_meta({"op": "move", "tablet": int(tablet_id),
+                                   "to": dst})
+        tm.move(tablet_id, dst)
+        self._migrate_shard(src)
+        self._c_tablet_moves.inc()
+        return True
+
+    def merge_tablet(self, tablet_id: int) -> bool:
+        """Merge a tablet with its right neighbor (the inverse of
+        ``split_tablet`` — Accumulo's range coalescing for gone-cold
+        ranges). If the neighbor lives on a different shard it is first
+        moved to this tablet's owner (journaled like any move); the merge
+        itself is metadata only. Returns False when there is no right
+        neighbor."""
+        self._check_open()
+        tm = self._require_tablets()
+        i = tm.index_of(tablet_id)
+        if i + 1 >= tm.n:
+            return False
+        if tm.owners[i] != tm.owners[i + 1]:
+            self.move_tablet(int(tm.tablet_ids[i + 1]), int(tm.owners[i]))
+        if self._wal is not None:
+            self._wal.append_meta({"op": "merge", "tablet": int(tablet_id)})
+        tm.merge(tablet_id)
+        self._c_tablet_merges.inc()
+        return True
+
+    def _migrate_shard(self, src: int) -> None:
+        """Re-route everything resident on shard ``src`` through the
+        CURRENT tablet map: flush, scan the shard's combined triples,
+        clear its runs, and re-insert in memtable-sized chunks. Entries
+        whose tablet still lives on ``src`` land back; moved tablets'
+        entries land on their new owner. Not WAL-logged (the data is
+        already durable before the move's meta frame) and not counted as
+        ingest (``_migrating`` guards the load/ingest counters)."""
+        self.flush()
+        r, c, v = self.scan_shard(src)
+        self._runs.clear_shard(src)
+        if len(r) == 0:
+            return
+        self._migrating = True
+        try:
+            step = self.mem_cap
+            for i in range(0, len(r), step):
+                self._insert_batch(r[i:i + step], c[i:i + step],
+                                   v[i:i + step])
+        finally:
+            self._migrating = False
+        self.flush()
+
+    def maybe_rebalance(self, split_threshold: float = 1.5,
+                        max_tablets: int = None, min_load: float = 1.0):
+        """One round of the tablet balance policy (the Accumulo master
+        analogue, driven by the obs-recorded per-tablet loads):
+
+        1. SPLIT any tablet whose load exceeds ``split_threshold`` times
+           the mean per-shard load (bounded by ``max_tablets``, default
+           ``8 * S``) — a hot range becomes two movable halves;
+        2. LPT-assign tablets to shards (heaviest tablet to the least
+           loaded shard, current owner preferred on ties so a balanced
+           map never thrashes) and migrate the changed assignments;
+        3. decay the load signal by half so the policy tracks the recent
+           workload.
+
+        Returns ``{"splits", "moves", "balance"}`` where balance is the
+        post-rebalance max/mean per-shard load (1.0 = perfect). Greedy
+        LPT bounds it by (4/3 - 1/(3S)) whenever no single tablet
+        dominates, comfortably under the ≤ 2.0 acceptance bar."""
+        self._check_open()
+        tm = self._require_tablets()
+        out = {"splits": 0, "moves": 0}
+        total = float(tm.loads.sum())
+        if total >= min_load:
+            cap = 8 * self.S if max_tablets is None else int(max_tablets)
+            mean_shard = total / self.S
+            for _ in range(self.S):  # bounded split rounds per call
+                i = int(np.argmax(tm.loads))
+                if (tm.loads[i] <= split_threshold * mean_shard
+                        or tm.n >= cap):
+                    break
+                if self.split_tablet(int(tm.tablet_ids[i])) is None:
+                    break
+                out["splits"] += 1
+            order = np.argsort(tm.loads, kind="stable")[::-1]
+            shard_load = np.zeros(self.S)
+            assign = np.empty(tm.n, np.int32)
+            for i in order:
+                d = int(np.argmin(shard_load))
+                cur = int(tm.owners[i])
+                if shard_load[cur] <= shard_load[d] + 1e-9:
+                    d = cur  # tie: keep the tablet where it lives
+                assign[i] = d
+                shard_load[d] += tm.loads[i]
+            for i in np.flatnonzero(assign != tm.owners):
+                if self.move_tablet(int(tm.tablet_ids[i]), int(assign[i])):
+                    out["moves"] += 1
+        tm.decay()
+        out["balance"] = tm.shard_balance()
+        self._reg.gauge("lsm_tablet_balance", table=self.name).set(
+            out["balance"])
+        self._reg.gauge("lsm_tablets", table=self.name).set(tm.n)
+        return out
+
+    def _apply_replayed_meta(self, op: dict) -> None:
+        """Apply one WAL meta frame during recovery: the map mutates at
+        the SAME log point it did live — including the physical move
+        migration — so data frames replayed after the op route to the
+        identical shards (``lsm.manifest.recover``)."""
+        if self.tablet_map is None:
+            return
+        tm = self.tablet_map
+        kind = op.get("op")
+        if kind == "split":
+            tm.split(int(op["tablet"]), int(op["key"]),
+                     new_id=int(op["new"]))
+        elif kind == "move":
+            src = int(tm.owners[tm.index_of(int(op["tablet"]))])
+            dst = int(op["to"])
+            if src != dst:
+                tm.move(int(op["tablet"]), dst)
+                self._migrate_shard(src)
+        elif kind == "merge":
+            tm.merge(int(op["tablet"]))
+
     # -------------------------------------------------------------- query
     def query_rows(self, row_ids: np.ndarray, max_return: int = 256,
                    col_filter: np.ndarray = None):
@@ -788,7 +1041,12 @@ class ShardedTable:
             if not (self.engine == "lsm" and self.fused_reads):
                 host_filter, col_filter = col_filter, None
         row_ids = np.asarray(row_ids, np.int32)
-        owner = shard_of(row_ids, self.S, self.id_capacity)
+        if self.tablet_map is not None:
+            tidx = self.tablet_map.tablet_of(row_ids)
+            self.tablet_map.record_load(tidx)  # queries drive splits too
+            owner = self.tablet_map.owners[tidx].astype(np.int32)
+        else:
+            owner = shard_of(row_ids, self.S, self.id_capacity)
         out_r, out_c, out_v = [], [], []
         if self.engine == "lsm":
             for s in np.unique(owner):
@@ -899,13 +1157,23 @@ class ShardedTable:
                 host_filter, col_filter = col_filter, None
         out_r, out_c, out_v = [], [], []
         if hi > lo:
-            s_lo = int(shard_of(np.asarray([lo]), self.S, self.id_capacity)[0])
-            s_hi = int(shard_of(np.asarray([max(hi - 1, lo)]), self.S,
-                                self.id_capacity)[0])
+            if self.tablet_map is not None:
+                # per-owner sub-ranges in KEY order (adjacent same-owner
+                # tablets coalesced): concatenated segment outputs stay
+                # globally (row, col)-sorted even under a skewed map
+                segs = self.tablet_map.segments(lo, hi)
+                self.tablet_map.touch_range(lo, hi)
+            else:
+                s_lo = int(shard_of(np.asarray([lo]), self.S,
+                                    self.id_capacity)[0])
+                s_hi = int(shard_of(np.asarray([max(hi - 1, lo)]), self.S,
+                                    self.id_capacity)[0])
+                # each shard clips the full range itself (fence ranks)
+                segs = [(s, lo, hi) for s in range(s_lo, s_hi + 1)]
             if self.engine != "lsm":
-                if self._mem_n[s_lo:s_hi + 1].max(initial=0) > 0:
+                if self._mem_n[[s for s, _, _ in segs]].max(initial=0) > 0:
                     self.flush()
-            for s in range(s_lo, s_hi + 1):
+            for s, seg_lo, seg_hi in segs:
                 self._c_shard_scan[s].inc()
                 t_sh = perf_counter()
                 if self.engine == "lsm":
@@ -923,11 +1191,12 @@ class ShardedTable:
                                     self._mem_c[s, :mem_n],
                                     self._mem_v[s, :mem_n])
                         r, c, v = self._runs.scan_shard_fused(
-                            int(s), lo, hi, mem_host=fmem, width=width,
-                            mem_sorted=mem_sorted, col_filter=col_filter)
+                            int(s), seg_lo, seg_hi, mem_host=fmem,
+                            width=width, mem_sorted=mem_sorted,
+                            col_filter=col_filter)
                     else:  # baseline: full shard scan + host range filter
                         r, c, v = self.scan_shard(s)
-                        keep = (r >= lo) & (r < hi)
+                        keep = (r >= seg_lo) & (r < seg_hi)
                         r, c, v = r[keep], c[keep], v[keep]
                 else:  # legacy single run: endpoint ranks on the host copy
                     t = self._shard_views.get(int(s))
@@ -935,8 +1204,8 @@ class ShardedTable:
                         t = jax.tree.map(lambda x: x[s], self.tablets)
                         self._shard_views[int(s)] = t
                     rows = np.asarray(t.rows)
-                    a = int(np.searchsorted(rows, lo, side="left"))
-                    b = int(np.searchsorted(rows, hi, side="left"))
+                    a = int(np.searchsorted(rows, seg_lo, side="left"))
+                    b = int(np.searchsorted(rows, seg_hi, side="left"))
                     r = rows[a:b]
                     c = np.asarray(t.cols)[a:b]
                     v = np.asarray(t.vals)[a:b]

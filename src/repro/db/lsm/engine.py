@@ -940,6 +940,69 @@ class LSMRuns:
         n += sum(1 for k in range(int(self.l0_used[s])) if self.l0_n[s, k])
         return n
 
+    # ------------------------------------------------------ tablet support
+    def clear_shard(self, s: int) -> None:
+        """Drop EVERY resident run of one shard — L0 slots and all
+        levels, including the deepest. Tablet migration uses this: the
+        caller has already scanned the shard's combined triples and will
+        re-insert them under the new tablet map, so the old physical
+        placement must vanish first (otherwise moved entries would be
+        served from both shards)."""
+        mask = np.zeros((self.S,), bool)
+        mask[s] = True
+        m_dev = jnp.asarray(mask)
+        m3 = m_dev[:, None, None]
+        self.l0_rows = jnp.where(m3, jnp.int32(I32_MAX), self.l0_rows)
+        self.l0_cols = jnp.where(m3, jnp.int32(I32_MAX), self.l0_cols)
+        self.l0_vals = jnp.where(m3, jnp.float32(0.0), self.l0_vals)
+        self.l0_bloom = jnp.where(m3, jnp.uint32(0), self.l0_bloom)
+        self.l0_fence = jnp.where(m3, jnp.int32(I32_MAX), self.l0_fence)
+        self.l0_n[mask] = 0
+        self.l0_min[mask] = I32_MAX
+        self.l0_max[mask] = -1
+        self.l0_used[mask] = 0
+        m2 = m_dev[:, None]
+        for lv in self.levels:
+            lv["rows"] = jnp.where(m2, jnp.int32(I32_MAX), lv["rows"])
+            lv["cols"] = jnp.where(m2, jnp.int32(I32_MAX), lv["cols"])
+            lv["vals"] = jnp.where(m2, jnp.float32(0.0), lv["vals"])
+            lv["bloom"] = jnp.where(m2, jnp.uint32(0), lv["bloom"])
+            lv["fence"] = jnp.where(m2, jnp.int32(I32_MAX), lv["fence"])
+            lv["n"][mask] = 0
+            lv["minr"][mask] = I32_MAX
+            lv["maxr"][mask] = -1
+        self._view_cache.clear()
+
+    def fence_keys(self, s: int, lo: int, hi: int) -> np.ndarray:
+        """Sorted host view of shard ``s``'s resident fence keys inside
+        ``[lo, hi)``. Fences sample each sorted run at fixed block
+        stride, so their distribution tracks the shard's key
+        distribution without scanning any run."""
+        keys = []
+        for lv in self.levels:
+            if lv["n"][s] and lv["minr"][s] < hi and lv["maxr"][s] >= lo:
+                keys.append(np.asarray(lv["fence"][s]))
+        for k in range(int(self.l0_used[s])):
+            if (self.l0_n[s, k] and self.l0_min[s, k] < hi
+                    and self.l0_max[s, k] >= lo):
+                keys.append(np.asarray(self.l0_fence[s, k]))
+        if not keys:
+            return np.zeros(0, np.int64)
+        cat = np.concatenate(keys).astype(np.int64)
+        cat = cat[(cat >= lo) & (cat < hi) & (cat != I32_MAX)]
+        cat.sort()
+        return cat
+
+    def fence_median(self, s: int, lo: int, hi: int) -> int:
+        """Median resident fence key of shard ``s`` within ``[lo, hi)``
+        — the tablet split point: an approximate median KEY of the
+        shard's data in the range, for free. Falls back to the range
+        midpoint when no fence lands inside; the result is always
+        strictly interior to ``(lo, hi)`` (callers ensure width > 1)."""
+        ks = self.fence_keys(s, lo, hi)
+        med = int(np.median(ks)) if len(ks) else (int(lo) + int(hi)) // 2
+        return int(min(max(med, int(lo) + 1), int(hi) - 1))
+
     # --------------------------------------------------------- health view
     def refresh_health_gauges(self, bloom_probes: int = 0) -> None:
         """Derive the engine health gauges from current state: resident

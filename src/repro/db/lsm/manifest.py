@@ -71,13 +71,17 @@ def write_snapshot(table, dirpath: str) -> str:
         "bloom_hashes": list(runs.bloom_hashes),
     })
     man = {
-        "format": 2,
+        # format 3 = format 2 + the "tablets" key (dynamic tablet map);
+        # static tables keep writing format 2 so older readers still work
+        "format": 3 if table.tablet_map is not None else 2,
         "name": table.name,
         "config": config,
         "snapshot": SNAPSHOT,
         "wal": WAL_FILE,
         "wal_offset": table._wal.tell() if table._wal else 0,
     }
+    if table.tablet_map is not None:
+        man["tablets"] = table.tablet_map.to_manifest()
     man_tmp = os.path.join(dirpath, MANIFEST + ".tmp")
     with open(man_tmp, "w") as f:
         json.dump(man, f, indent=1)
@@ -87,13 +91,20 @@ def write_snapshot(table, dirpath: str) -> str:
     return os.path.join(dirpath, MANIFEST)
 
 
-def recover(dirpath: str):
+def recover(dirpath: str, tablet_filter=None):
     """Rebuild a ``ShardedTable`` (engine='lsm') after a crash.
 
     Works from any consistent prefix of (manifest?, snapshot?, WAL): with no
     manifest the whole WAL replays into a table that must be given its
     config via the WAL-only path; with a manifest, snapshot runs load
     directly and only the WAL suffix replays.
+
+    ``tablet_filter`` (iterable of tablet ids, dynamic-tablet stores
+    only) restricts the DATA replay to those tablets' frames — the
+    distributed-recovery contract: a lost process replays only its own
+    tablets' suffix and skips foreign frames without parsing them into
+    the store. Tablet-map META frames (splits/moves) always apply, so
+    the recovered map matches the cluster's regardless of the filter.
     """
     from ..kvstore import ShardedTable, StoreConfig
     from .wal import WriteAheadLog
@@ -123,10 +134,23 @@ def recover(dirpath: str):
                            if k.startswith(_T_PREFIX)}
                 if t_state:
                     table.t_store._runs.load_state(t_state)
+    # the tablet map restores BEFORE replay so suffix data frames route
+    # through the same topology the live table had at the snapshot point;
+    # meta frames then mutate it mid-replay exactly where live did
+    if man.get("tablets") and table.tablet_map is not None:
+        from ..tablets import TabletMap
+        table.tablet_map = TabletMap.from_manifest(man["tablets"])
     # replay the post-snapshot WAL suffix (torn tail drops at CRC check)
     wal_file = os.path.join(dirpath, man["wal"])
-    for rows, cols, vals in WriteAheadLog.replay(
-            wal_file, start=man["wal_offset"]):
+    tf = (None if tablet_filter is None
+          else {int(t) for t in tablet_filter})
+    for item in WriteAheadLog.replay_full(wal_file, start=man["wal_offset"]):
+        if item[0] == "meta":
+            table._apply_replayed_meta(item[1])
+            continue
+        _, tid, rows, cols, vals, _pair = item
+        if tf is not None and tid is not None and tid not in tf:
+            continue  # another process's tablet: skip, don't parse in
         table.insert(np.asarray(rows), np.asarray(cols), np.asarray(vals),
                      _log=False)
     # chop any torn tail BEFORE re-appending: otherwise post-recovery

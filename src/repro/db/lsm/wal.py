@@ -7,16 +7,34 @@ triples; string-dictionary durability is a separate concern (ROADMAP).
 
 Record format (little-endian), one record per ``append``::
 
-    u32 n        number of triples (bit 31 = pair-ingest flag)
-    u32 crc      crc32 of the payload
+    u32 n        number of triples (bits 31/30/29 are flags, below)
+    u32 crc      crc32 of (tablet-id bytes if any) + payload
+    [u32 tablet] present only when bit 30 is set
     payload      n * int32 rows | n * int32 cols | n * float32 vals
 
-The high bit of ``n`` tags a *pair-ingest* frame: the batch also feeds the
-table's transpose sibling (``A^T`` derives deterministically by swapping
-rows/cols, so the payload is logged ONCE — one record, one fsync, and
-replay can never rebuild half a pair). Readers written before the flag
-treat tagged logs as corrupt rather than misparsing them, and untagged
-logs replay identically under the new reader.
+Flag bits in the ``n`` field:
+
+  * bit 31 (``_PAIR_FLAG``) — *pair-ingest* frame: the batch also feeds
+    the table's transpose sibling (``A^T`` derives deterministically by
+    swapping rows/cols, so the payload is logged ONCE — one record, one
+    fsync, and replay can never rebuild half a pair).
+  * bit 30 (``_TABLET_FLAG``) — the frame carries a ``u32`` tablet id
+    between the crc and the payload: every triple in the batch belongs
+    to that tablet, so a recovering process can replay ONLY its own
+    tablets' suffix by skipping foreign frames without parsing them.
+  * bit 29 (``_META_FLAG``) — the payload is a tablet-map operation
+    (UTF-8 JSON padded with spaces to a 12-byte multiple, so ``n`` keeps
+    the ``12 * n`` payload-length arithmetic): ``{"op": "split", ...}``,
+    ``{"op": "move", ...}`` or ``{"op": "merge", ...}``.
+    Replay applies these to the tablet map
+    at the same log point the live table did, so data frames after the
+    op route identically.
+
+Frames without flags are byte-identical to the original format; tagged
+and meta frames only appear when a table runs with ``dynamic_tablets``.
+Readers written before a flag treat tagged logs as corrupt rather than
+misparsing them, and untagged logs replay identically under the new
+reader.
 
 Replay stops at the first torn or corrupt record (crash-consistent: a
 partially flushed tail is discarded, never misparsed). ``tell()`` exposes
@@ -25,6 +43,7 @@ recovery can replay only the suffix.
 """
 from __future__ import annotations
 
+import json
 import os
 import struct
 import zlib
@@ -37,8 +56,11 @@ from ...obs import default_registry, default_tracer
 
 _HEADER = b"RLSMWAL1"
 _REC = struct.Struct("<II")
-_PAIR_FLAG = 0x80000000  # high bit of the n field: dual-ingest frame
-_N_MASK = _PAIR_FLAG - 1
+_TID = struct.Struct("<I")
+_PAIR_FLAG = 0x80000000    # bit 31: dual-ingest frame
+_TABLET_FLAG = 0x40000000  # bit 30: frame carries a u32 tablet id
+_META_FLAG = 0x20000000    # bit 29: payload is a tablet-map op (JSON)
+_N_MASK = _META_FLAG - 1
 
 Batch = Tuple[np.ndarray, np.ndarray, np.ndarray]
 
@@ -47,6 +69,42 @@ def _wal_label(path: str) -> str:
     """Metric label for a log file: its parent dir name (the wal_dir is
     per-table), falling back to the basename."""
     return os.path.basename(os.path.dirname(path)) or os.path.basename(path)
+
+
+def _iter_frames(f) -> Iterator[tuple]:
+    """Parse intact frames from an open log positioned past the header.
+
+    Yields ``("meta", op_dict)`` for tablet-map frames and
+    ``("data", tablet_id_or_None, rows, cols, vals, pair)`` for triple
+    frames. Stops silently at the first torn or corrupt record.
+    """
+    while True:
+        head = f.read(_REC.size)
+        if len(head) < _REC.size:
+            return
+        n_raw, crc = _REC.unpack(head)
+        n = n_raw & _N_MASK
+        if n_raw & _META_FLAG:
+            payload = f.read(12 * n)
+            if len(payload) < 12 * n or zlib.crc32(payload) != crc:
+                return
+            yield "meta", json.loads(payload.decode("utf-8"))
+            continue
+        extra = b""
+        tablet = None
+        if n_raw & _TABLET_FLAG:
+            extra = f.read(_TID.size)
+            if len(extra) < _TID.size:
+                return
+            tablet = _TID.unpack(extra)[0]
+        payload = f.read(12 * n)
+        if len(payload) < 12 * n or zlib.crc32(extra + payload) != crc:
+            return
+        yield ("data", tablet,
+               np.frombuffer(payload[: 4 * n], "<i4"),
+               np.frombuffer(payload[4 * n: 8 * n], "<i4"),
+               np.frombuffer(payload[8 * n:], "<f4"),
+               bool(n_raw & _PAIR_FLAG))
 
 
 class WriteAheadLog:
@@ -72,12 +130,17 @@ class WriteAheadLog:
 
     # ------------------------------------------------------------ writing
     def append(self, rows: np.ndarray, cols: np.ndarray,
-               vals: np.ndarray, pair: bool = False) -> int:
+               vals: np.ndarray, pair: bool = False,
+               tablet: Optional[int] = None) -> int:
         """Log one batch; returns the byte offset AFTER the record.
 
         ``pair=True`` tags the frame as a dual-ingest batch: recovery
         re-derives the transpose sibling's triples from the same payload,
-        so both tables of a pair commit or vanish together."""
+        so both tables of a pair commit or vanish together.
+
+        ``tablet`` tags every triple in the frame as belonging to one
+        tablet (the caller partitions a mixed batch into per-tablet
+        frames), enabling per-tablet suffix replay."""
         t0 = perf_counter()
         with self._trace.span("wal.append", log=_wal_label(self.path),
                               n=len(rows)):
@@ -85,7 +148,13 @@ class WriteAheadLog:
                        + np.asarray(cols, "<i4").tobytes()
                        + np.asarray(vals, "<f4").tobytes())
             n_field = len(rows) | (_PAIR_FLAG if pair else 0)
-            self._f.write(_REC.pack(n_field, zlib.crc32(payload)))
+            extra = b""
+            if tablet is not None:
+                n_field |= _TABLET_FLAG
+                extra = _TID.pack(int(tablet))
+            self._f.write(_REC.pack(n_field, zlib.crc32(extra + payload)))
+            if extra:
+                self._f.write(extra)
             self._f.write(payload)
             self._f.flush()
             if self.sync:
@@ -93,6 +162,28 @@ class WriteAheadLog:
                 os.fsync(self._f.fileno())
                 self._c_fsyncs.inc()
                 self._h_fsync.observe(perf_counter() - t1)
+        self._c_appends.inc()
+        self._c_bytes.inc(_REC.size + len(extra) + len(payload))
+        self._h_append.observe(perf_counter() - t0)
+        return self._f.tell()
+
+    def append_meta(self, op: dict) -> int:
+        """Log one tablet-map operation (split/move) as a meta frame;
+        returns the byte offset AFTER the record. The op is logged BEFORE
+        the in-memory map changes (write-ahead), so replay applies it at
+        the same point in the data stream."""
+        t0 = perf_counter()
+        payload = json.dumps(op, sort_keys=True).encode("utf-8")
+        payload += b" " * (-len(payload) % 12)
+        n_field = _META_FLAG | (len(payload) // 12)
+        self._f.write(_REC.pack(n_field, zlib.crc32(payload)))
+        self._f.write(payload)
+        self._f.flush()
+        if self.sync:
+            t1 = perf_counter()
+            os.fsync(self._f.fileno())
+            self._c_fsyncs.inc()
+            self._h_fsync.observe(perf_counter() - t1)
         self._c_appends.inc()
         self._c_bytes.inc(_REC.size + len(payload))
         self._h_append.observe(perf_counter() - t0)
@@ -122,16 +213,9 @@ class WriteAheadLog:
             if f.read(len(_HEADER)) != _HEADER:
                 return 0
             end = f.tell()
-            while True:
-                head = f.read(_REC.size)
-                if len(head) < _REC.size:
-                    return end
-                n, crc = _REC.unpack(head)
-                n &= _N_MASK
-                payload = f.read(12 * n)
-                if len(payload) < 12 * n or zlib.crc32(payload) != crc:
-                    return end
+            for _ in _iter_frames(f):
                 end = f.tell()
+            return end
 
     @staticmethod
     def truncate_torn_tail(path: str) -> int:
@@ -149,7 +233,9 @@ class WriteAheadLog:
 
     @staticmethod
     def replay(path: str, start: int = 0, tagged: bool = False) -> Iterator:
-        """Yield logged batches from byte offset ``start`` (0 = whole log).
+        """Yield logged DATA batches from byte offset ``start`` (0 = whole
+        log); tablet-map meta frames are skipped (use ``replay_full`` to
+        see them).
 
         Yields ``(rows, cols, vals)`` triples; with ``tagged=True`` each
         item is ``(rows, cols, vals, pair)`` where ``pair`` reports the
@@ -159,6 +245,22 @@ class WriteAheadLog:
         Tolerates a torn tail: a record whose header or payload is short,
         or whose CRC mismatches, ends the iteration (simulated crash).
         """
+        for item in WriteAheadLog.replay_full(path, start=start):
+            if item[0] != "data":
+                continue
+            _, _tid, rows, cols, vals, pair = item
+            if tagged:
+                yield rows, cols, vals, pair
+            else:
+                yield rows, cols, vals
+
+    @staticmethod
+    def replay_full(path: str, start: int = 0) -> Iterator[tuple]:
+        """Yield EVERY intact frame from byte offset ``start``:
+        ``("data", tablet_id_or_None, rows, cols, vals, pair)`` for
+        triple batches and ``("meta", op_dict)`` for tablet-map ops, in
+        log order. Tablet-aware recovery filters data frames by tablet id
+        and applies meta frames to its map as they stream past."""
         if not os.path.exists(path):
             return
         reg = default_registry()
@@ -172,23 +274,10 @@ class WriteAheadLog:
                 return
             if start > len(_HEADER):
                 f.seek(start)
-            while True:
-                head = f.read(_REC.size)
-                if len(head) < _REC.size:
-                    break
-                n, crc = _REC.unpack(head)
-                pair = bool(n & _PAIR_FLAG)
-                n &= _N_MASK
-                payload = f.read(12 * n)
-                if len(payload) < 12 * n or zlib.crc32(payload) != crc:
-                    break  # torn/corrupt tail
-                rows = np.frombuffer(payload[: 4 * n], "<i4")
-                cols = np.frombuffer(payload[4 * n: 8 * n], "<i4")
-                vals = np.frombuffer(payload[8 * n:], "<f4")
+            pos = f.tell()
+            for item in _iter_frames(f):
                 c_batches.inc()
-                c_bytes.inc(_REC.size + len(payload))
-                if tagged:
-                    yield rows, cols, vals, pair
-                else:
-                    yield rows, cols, vals
+                c_bytes.inc(f.tell() - pos)
+                pos = f.tell()
+                yield item
         h_replay.observe(perf_counter() - t0)

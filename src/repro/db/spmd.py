@@ -201,6 +201,68 @@ def make_spmd_lsm_ingest_step(mesh, axis: str, num_shards: int,
     return _instrumented(jax.jit(fn), "spmd_lsm_ingest")
 
 
+def _bucket_local_tablets(br, bc, bv, splits, owners, num_shards: int):
+    """Tablet-map routing variant of ``_bucket_local``: the owner shard is
+    ``owners[searchsorted(splits, id, 'right')]`` with ``splits``/``owners``
+    as DEVICE OPERANDS (``TabletMap.device_routing`` pads them to a static
+    max tablet count; padded split slots hold ``id_capacity``, which no
+    valid id reaches). A split or move changes array VALUES, never shapes
+    — rebalancing the mesh does not retrace the compiled ingest step."""
+    bcap = br.shape[0]
+    t = jnp.searchsorted(splits, br, side="right")
+    dest = jnp.where(br == I32_MAX, num_shards - 1, owners[t])
+    order = jnp.argsort(dest)  # stable
+    dest, sr, sc, sv = dest[order], br[order], bc[order], bv[order]
+    starts = jnp.searchsorted(dest, jnp.arange(num_shards, dtype=dest.dtype))
+    slot = jnp.arange(bcap, dtype=jnp.int32) - starts[dest].astype(jnp.int32)
+    send_r = jnp.full((num_shards, bcap), I32_MAX, jnp.int32).at[dest, slot].set(sr)
+    send_c = jnp.full((num_shards, bcap), I32_MAX, jnp.int32).at[dest, slot].set(sc)
+    send_v = jnp.zeros((num_shards, bcap), jnp.float32).at[dest, slot].set(sv)
+    return send_r, send_c, send_v
+
+
+def make_spmd_tablet_ingest_step(mesh, axis: str, num_shards: int,
+                                 combiner: str = "last"):
+    """LSM ingest step routed by a DYNAMIC tablet map instead of the
+    static range hash: same shape as ``make_spmd_lsm_ingest_step``
+    (bucket → all_to_all → sort/dedup → L0 append, same full-stack
+    contract), but each call takes the map's current ``(splits, owners)``
+    routing arrays as replicated operands. The host rebalances by calling
+    ``TabletMap.device_routing(max_T)`` again and passing the new arrays
+    — no recompile, because only values changed (see
+    ``_bucket_local_tablets``)."""
+    from .kvstore import _dedup_combine
+
+    def shard_fn(l0: L0Stack, br, bc, bv, splits, owners):
+        me = jax.tree.map(lambda x: x[0], l0)
+        send = _bucket_local_tablets(br[0], bc[0], bv[0], splits, owners,
+                                     num_shards)
+        rr = jax.lax.all_to_all(send[0], axis, 0, 0).reshape(-1)
+        rc = jax.lax.all_to_all(send[1], axis, 0, 0).reshape(-1)
+        rv = jax.lax.all_to_all(send[2], axis, 0, 0).reshape(-1)
+        order = jnp.lexsort((rc, rr))
+        sr, sc, sv = rr[order], rc[order], rv[order]
+        keep, out_v = _dedup_combine(sr, sc, sv, combiner)
+        cap = sr.shape[0]
+        pos = jnp.cumsum(keep) - 1
+        idx = jnp.where(keep, pos, cap)
+        run_r = jnp.full((cap,), I32_MAX, jnp.int32).at[idx].set(sr, mode="drop")
+        run_c = jnp.full((cap,), I32_MAX, jnp.int32).at[idx].set(sc, mode="drop")
+        run_v = jnp.zeros((cap,), jnp.float32).at[idx].set(out_v, mode="drop")
+        slots = me.rows.shape[0]
+        new = L0Stack(rows=me.rows.at[me.k].set(run_r, mode="drop"),
+                      cols=me.cols.at[me.k].set(run_c, mode="drop"),
+                      vals=me.vals.at[me.k].set(run_v, mode="drop"),
+                      k=jnp.minimum(me.k + 1, slots))
+        return jax.tree.map(lambda x: x[None], new)
+
+    fn = _shard_map(shard_fn, mesh=mesh,
+                    in_specs=(_l0_spec(axis), P(axis, None), P(axis, None),
+                              P(axis, None), P(), P()),
+                    out_specs=_l0_spec(axis), **_SHARD_MAP_KW)
+    return _instrumented(jax.jit(fn), "spmd_tablet_ingest")
+
+
 def make_spmd_lsm_pair_ingest_step(mesh, axis: str, num_shards: int,
                                    id_capacity: int,
                                    combiner: str = "last"):

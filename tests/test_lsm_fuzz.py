@@ -244,6 +244,138 @@ def test_wal_mid_file_corruption_stops_replay_cleanly(tmp_path):
     st._wal.close()
 
 
+# ------------------------------------- tablet split-boundary crash fuzz
+def _build_tablet_wal_dir(root):
+    """Dynamic-tablet transpose PAIR whose post-checkpoint WAL interleaves
+    tablet-tagged pair data frames (bits 31+30), a SPLIT meta frame, and a
+    MOVE meta frame (bit 29). Returns everything the truncation oracle
+    needs: the dir, the last-wins dict of checkpointed triples, the
+    checkpoint offset, and the [win_lo, win_hi) byte window bracketing the
+    split/move frame sequence."""
+    d = os.path.join(root, "tdb")
+    st = ShardedTable("fzt", num_shards=2, capacity_per_shard=1024,
+                      batch_cap=64, id_capacity=1 << 9, combiner="last",
+                      memtable_cap=64, engine="lsm", wal_dir=d,
+                      transpose=True, dynamic_tablets=True)
+    rng = np.random.default_rng(42)
+    base = {}
+
+    def put():
+        r = rng.choice(1 << 9, BATCH_N, replace=False).astype(np.int32)
+        c = rng.integers(0, 4, BATCH_N).astype(np.int32)
+        v = rng.normal(size=BATCH_N).astype(np.float32)
+        st.insert(r, c, v)
+        return r, c, v
+
+    for _ in range(N_PRE):
+        for a, b, x in zip(*put()):
+            base[(int(a), int(b))] = float(x)
+    st.checkpoint()
+    ckpt_off = st._wal.tell()
+    put()
+    win_lo = st._wal.tell()
+    new_id = st.split_tablet()  # hottest tablet, fence-median key
+    assert new_id is not None
+    put()
+    cur = int(st.tablet_map.owners[st.tablet_map.index_of(new_id)])
+    assert st.move_tablet(new_id, 1 - cur)
+    put()
+    win_hi = st._wal.tell()
+    put()  # one frame past the window: replay must resume cleanly after it
+    st._wal.close()  # crash
+    return d, base, ckpt_off, win_lo, win_hi
+
+
+def _tablet_frame_oracle(wal_path, ckpt_off, base_rows, tablet_filter=None):
+    """Reference replay: walk the intact post-checkpoint frames of a (cut)
+    log and apply them to a plain dict + TabletMap — no engine, no
+    migration, no memtable. ``recover`` must land on the same map and the
+    same triples however its snapshot/migration machinery gets there."""
+    from repro.db.lsm.wal import WriteAheadLog
+    from repro.db.tablets import TabletMap
+
+    tm = TabletMap.uniform(2, 1 << 9)
+    rows = dict(base_rows)
+    for item in WriteAheadLog.replay_full(wal_path, start=ckpt_off):
+        if item[0] == "meta":
+            op = item[1]
+            if op["op"] == "split":
+                tm.split(op["tablet"], op["key"], new_id=op["new"])
+            elif op["op"] == "move":
+                tm.move(op["tablet"], op["to"])
+            else:
+                tm.merge(op["tablet"])
+            continue
+        _, tid, r, c, v, pair = item
+        assert pair and tid is not None  # every data frame tagged, paired
+        if tablet_filter is not None and tid not in tablet_filter:
+            continue
+        for a, b, x in zip(r, c, v):
+            rows[(int(a), int(b))] = float(x)
+    return tm, rows
+
+
+def test_wal_tablet_split_boundary_truncation_fuzz(tmp_path):
+    """Cut the WAL at EVERY byte across the frame window holding a tablet
+    split and a tablet move (plus the tail frame and sampled earlier
+    offsets; FUZZ_BUDGET sweeps every post-checkpoint byte): recovery must
+    restore the tablet map to exactly the meta-frame prefix below the cut
+    AND the data to the intact-frame prefix — with the transpose sibling
+    staying exactly the transpose throughout."""
+    src, base, ckpt_off, win_lo, win_hi = _build_tablet_wal_dir(
+        str(tmp_path))
+    wal = os.path.join(src, "wal.log")
+    size = os.path.getsize(wal)
+    if FUZZ_BUDGET:
+        cuts = list(range(ckpt_off, size + 1))
+    else:
+        rng = np.random.default_rng(13)
+        sampled = sorted(set(int(x) for x in
+                             rng.integers(ckpt_off, win_lo, 6)))
+        cuts = sorted(set(sampled + list(range(win_lo - 4, win_hi + 1))
+                          + list(range(win_hi, size + 1, 5)) + [size]))
+    for cut in cuts:
+        d = str(tmp_path / f"tcut{cut}")
+        shutil.copytree(src, d)
+        with open(os.path.join(d, "wal.log"), "r+b") as f:
+            f.truncate(cut)
+        want_tm, want = _tablet_frame_oracle(os.path.join(d, "wal.log"),
+                                             ckpt_off, base)
+        st = recover(d)
+        assert st.tablet_map.to_manifest() == want_tm.to_manifest(), cut
+        assert _scan_dict(st) == pytest.approx(want), cut
+        assert _scan_dict(st.t_store) == pytest.approx(
+            {(b, a): v for (a, b), v in want.items()}), cut
+        st._wal.close()
+
+
+def test_wal_tablet_filtered_replay_per_tablet_suffix(tmp_path):
+    """Distributed-recovery contract: ``recover(d, tablet_filter=[t])``
+    restores the FULL tablet map (meta frames always apply) but replays
+    ONLY frames tagged ``t`` — for every tablet in the final map, the
+    filtered store holds the snapshot plus exactly that tablet's suffix,
+    and a post-recovery write into the filtered table stays readable."""
+    src, base, ckpt_off, _win_lo, _win_hi = _build_tablet_wal_dir(
+        str(tmp_path))
+    wal = os.path.join(src, "wal.log")
+    full_tm, _ = _tablet_frame_oracle(wal, ckpt_off, base)
+    for tid in full_tm.tablet_ids.tolist():
+        d = str(tmp_path / f"tf{tid}")
+        shutil.copytree(src, d)
+        st = recover(d, tablet_filter=[tid])
+        assert st.tablet_map.to_manifest() == full_tm.to_manifest(), tid
+        _, want = _tablet_frame_oracle(wal, ckpt_off, base,
+                                       tablet_filter={tid})
+        assert _scan_dict(st) == pytest.approx(want), tid
+        assert _scan_dict(st.t_store) == pytest.approx(
+            {(b, a): v for (a, b), v in want.items()}), tid
+        st.insert(np.asarray([500], np.int32), np.asarray([3], np.int32),
+                  np.asarray([6.5], np.float32))
+        r, _c, v = st.query_rows(np.asarray([500], np.int32))
+        assert r.tolist() == [500] and v[0] == pytest.approx(6.5)
+        st._wal.close()
+
+
 # ------------------------------------------------- dictionary durability
 def test_connector_recovery_restores_string_queries(tmp_path):
     """The StringDicts persist alongside the snapshot manifest (checkpoint

@@ -232,3 +232,57 @@ def test_no_unexpected_retraces_across_query_batch_sweep():
             f"batch {size} triggered a fresh trace"
         assert shapes() == warm_shapes, \
             f"batch {size} grew the compile cache"
+
+
+def test_no_retraces_after_tablet_split_and_move():
+    """The 'no retraces' invariant must survive TOPOLOGY changes: after a
+    tablet split + move + rebalance, ``warm_reads`` (which probes ids
+    sampled from each shard's OWNED ranges, not a uniform linspace) re-
+    warms both serving shapes, and no query batch in 64..4096 may trace
+    again — splits change routing values, never compiled shapes."""
+    st = ShardedTable("retrace_tablets", num_shards=2,
+                      capacity_per_shard=1 << 14, batch_cap=1024,
+                      id_capacity=1 << 16, memtable_cap=1024, engine="lsm",
+                      dynamic_tablets=True)
+    rng = np.random.default_rng(29)
+    # Zipf-skewed rows: the hot range drives a real split decision
+    rows = ((rng.zipf(1.2, 6144) * 7) % (1 << 16)).astype(np.int32)
+    for i in range(0, len(rows), 1024):
+        st.insert(rows[i:i + 1024], np.zeros(1024, np.int32),
+                  np.ones(1024, np.float32))
+    assert st.split_tablet() is not None
+    tm = st.tablet_map
+    moved = int(tm.tablet_ids[-1])
+    st.move_tablet(moved, 1 - int(tm.owners[tm.index_of(moved)]))
+    st.maybe_rebalance()
+    st.flush()
+    st.warm_reads()
+    reg = default_registry()
+
+    def retraces():
+        return sum(c.value for c in reg.series("lsm_retraces",
+                                               table="retrace_tablets"))
+
+    def shapes():
+        return sum(g.value for g in reg.series("lsm_compiled_shapes",
+                                               op="query"))
+
+    warm_retraces, warm_shapes = retraces(), shapes()
+    assert warm_retraces >= 1
+    q_pool = rng.choice(rows, 4096).astype(np.int32)
+    for size in (64, 256, 1024, 2048, 4096):
+        hit_rows, _c, _v = st.query_rows(q_pool[:size])
+        assert len(hit_rows) > 0
+        assert retraces() == warm_retraces, \
+            f"batch {size} retraced after split/move"
+        assert shapes() == warm_shapes, \
+            f"batch {size} grew the compile cache after split/move"
+    # a FURTHER split + re-warm must also hold the line (values-only
+    # routing updates: the compiled shapes are already resident)
+    if st.split_tablet() is not None:
+        st.flush()
+        st.warm_reads()
+        post_retraces, post_shapes = retraces(), shapes()
+        st.query_rows(q_pool[:1024])
+        assert retraces() == post_retraces
+        assert shapes() == post_shapes
